@@ -1,0 +1,48 @@
+"""Gradient-compression benchmark: cross-pod wire bytes + fidelity.
+
+The HPCA'22 bandwidth claim (1.5x) mapped to training: GBDI-FR compressed
+gradient exchange vs bf16 and fp32 transport.  Reports the fixed rate, the
+measured exactness on realistic gradient tensors, and the end-to-end error
+vs an fp32 psum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gbdi_fr import fit_fr_bases, fr_decode, fr_encode
+from repro.distributed.collectives import GRAD_FR
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # layered gradient scales, zeros from masking — realistic mixture
+    parts = [
+        rng.normal(0, s, 1 << 16) * (rng.random(1 << 16) > z)
+        for s, z in [(1e-3, 0.2), (3e-2, 0.0), (1e-4, 0.5), (5e-3, 0.1)]
+    ]
+    g = np.concatenate(parts).astype(np.float32)
+    gb = jnp.asarray(g).astype(jnp.bfloat16)
+    words = jax.lax.bitcast_convert_type(gb, jnp.uint16).astype(jnp.int32)
+    pages = words.reshape(-1, GRAD_FR.page_words)
+    bases = fit_fr_bases(pages, GRAD_FR)
+    blob = fr_encode(pages, bases, GRAD_FR)
+    dec = fr_decode(blob, bases, GRAD_FR)
+    back = jax.lax.bitcast_convert_type(
+        dec.reshape(-1)[: gb.size].astype(jnp.uint16), jnp.bfloat16
+    )
+
+    raw_fp32 = g.nbytes
+    raw_bf16 = g.nbytes // 2
+    comp = pages.shape[0] * GRAD_FR.compressed_bytes_per_page()
+    exact = float(jnp.mean((back == gb).astype(jnp.float32)))
+    err = float(jnp.max(jnp.abs(back.astype(jnp.float32) - g)))
+    bf16_err = float(jnp.max(jnp.abs(gb.astype(jnp.float32) - g)))
+    print(f"gradcomp/wire_bytes,0,fp32={raw_fp32};bf16={raw_bf16};gbdi_fr={comp};"
+          f"x_vs_fp32={raw_fp32/comp:.2f};x_vs_bf16={raw_bf16/comp:.2f}")
+    print(f"gradcomp/fidelity,0,exact_frac={exact:.4f};maxerr={err:.2e};"
+          f"bf16_cast_err={bf16_err:.2e};dropped={int(blob['n_dropped'].sum())}")
+
+
+if __name__ == "__main__":
+    main()

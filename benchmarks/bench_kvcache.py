@@ -1,0 +1,51 @@
+"""KV-cache compression benchmark: memory per sequence + attention error.
+
+llama3-405b-class decode (kv=8, hd=128, 32k context): raw vs GBDI-FR paged
+bytes, plus decode-attention output deviation on channel-structured KV."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gbdi_fr import FRConfig, fit_fr_bases
+from repro.serving import kv_cache as kvc
+
+
+def main():
+    spec = kvc.KVSpec(n_kv=8, head_dim=128, max_len=32768)
+    B = 4
+    print(f"kvcache/bytes,0,raw={spec.raw_bytes(B)};compressed={spec.compressed_bytes(B)};"
+          f"ratio={spec.raw_bytes(B)/spec.compressed_bytes(B):.3f}")
+
+    # fidelity on a short window (oracle path, CPU-sized)
+    small = kvc.KVSpec(n_kv=4, head_dim=32, max_len=128,
+                       fr=FRConfig(word_bits=16, page_words=128, delta_bits=8,
+                                   num_bases=14, outlier_cap=16))
+    rng = np.random.default_rng(0)
+    n = 96
+    ch = rng.normal(0, 1, (1, 1, 4, 32)) * 2
+    ks = (ch + rng.normal(0, 0.1, (2, n, 4, 32))).astype(np.float32)
+    vs = (ch + rng.normal(0, 0.1, (2, n, 4, 32))).astype(np.float32)
+    w = jax.lax.bitcast_convert_type(
+        jnp.asarray(np.concatenate([ks, vs], 1)).astype(jnp.bfloat16), jnp.uint16
+    )
+    bases = fit_fr_bases(w.astype(jnp.int32).reshape(-1), small.fr)
+    cache = kvc.init_compressed(small, 2, bases)
+    for t in range(n):
+        cache = kvc.append(small, cache, jnp.asarray(ks[:, t:t+1]), jnp.asarray(vs[:, t:t+1]), jnp.int32(t))
+    q = jnp.asarray(rng.normal(0, 1, (2, 1, 8, 32)).astype(np.float32))
+    out_c = kvc.attention_decode(small, q, cache, jnp.int32(n - 1))
+    Kr = jnp.asarray(ks[:, :n]).astype(jnp.bfloat16)
+    Vr = jnp.asarray(vs[:, :n]).astype(jnp.bfloat16)
+    qg = q.reshape(2, 1, 4, 2, 32)
+    lg = jnp.einsum("bskgh,btkh->bkgst", qg, Kr).astype(jnp.float32) / np.sqrt(32)
+    pr = jax.nn.softmax(lg, -1).astype(Vr.dtype)
+    ref = jnp.einsum("bkgst,btkh->bskgh", pr, Vr).reshape(2, 1, 256)
+    err = float(jnp.abs(out_c - ref).max())
+    rel = err / float(jnp.abs(ref).max())
+    print(f"kvcache/attention_error,0,max_abs={err:.4f};max_rel={rel:.4f}")
+
+
+if __name__ == "__main__":
+    main()

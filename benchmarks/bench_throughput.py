@@ -1,0 +1,55 @@
+"""Encode/decode engine throughput (paper §IV: compression/decompression
+engines).  Host variable-length codec (numpy) and device fixed-rate codec
+(jit'd oracle + Pallas interpret).  interpret-mode timings are NOT
+TPU-representative (documented); the jit'd oracle is the CPU datapoint."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gbdi
+from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode
+from repro.data import workloads
+
+
+def _time(fn, n=3):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def main():
+    data = workloads.generate("605.mcf_s", n_bytes=2 << 20)
+    model = gbdi.fit(data)
+    blob = gbdi.encode(data, model)
+    mb = data.nbytes / (1 << 20)
+
+    t_enc = _time(lambda: gbdi.encode(data, model))
+    t_dec = _time(lambda: gbdi.decode(blob))
+    print(f"throughput/host_encode,{t_enc/mb*1e6:.0f},MB/s={mb/t_enc:.1f}")
+    print(f"throughput/host_decode,{t_dec/mb*1e6:.0f},MB/s={mb/t_dec:.1f}")
+
+    fr = FRConfig()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        (rng.normal(0, 1, (256, fr.page_words)) * 2).astype(np.float32)
+    ).astype(jnp.bfloat16)
+    words = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.int32)
+    bases = fit_fr_bases(words, fr)
+    enc = jax.jit(lambda w: fr_encode(w, bases, fr))
+    eb = jax.block_until_ready(enc(words))
+    dec = jax.jit(lambda b: fr_decode(b, bases, fr))
+    fr_mb = words.size * 2 / (1 << 20)
+    t_fe = _time(lambda: jax.block_until_ready(enc(words)))
+    t_fd = _time(lambda: jax.block_until_ready(dec(eb)))
+    print(f"throughput/fr_encode_jit,{t_fe/fr_mb*1e6:.0f},MB/s={fr_mb/t_fe:.1f}")
+    print(f"throughput/fr_decode_jit,{t_fd/fr_mb*1e6:.0f},MB/s={fr_mb/t_fd:.1f}")
+
+
+if __name__ == "__main__":
+    main()

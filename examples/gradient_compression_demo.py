@@ -1,0 +1,53 @@
+"""Cross-pod gradient compression demo on 8 emulated devices.
+
+Runs the same gradient exchange two ways — plain psum vs GBDI-FR
+compressed ring — and shows the wire bytes and the numerical agreement.
+
+  PYTHONPATH=src python examples/gradient_compression_demo.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.gbdi_fr import fit_fr_bases
+from repro.distributed.collectives import GRAD_FR, compressed_pod_mean, plain_pod_mean
+from repro.launch.hlo_stats import analyze_module
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    rng = np.random.default_rng(0)
+    grads = {
+        "wq": jnp.asarray(rng.normal(0, 1e-3, (2, 1 << 14)).astype(np.float32)),
+        "wo": jnp.asarray(rng.normal(0, 2e-2, (2, 1 << 13)).astype(np.float32)),
+    }
+    words = jax.lax.bitcast_convert_type(
+        jnp.concatenate([g.reshape(-1) for g in grads.values()]).astype(jnp.bfloat16),
+        jnp.uint16,
+    ).astype(jnp.int32)
+    bases = fit_fr_bases(words, GRAD_FR)
+
+    specs = {k: P("pod") for k in grads}
+    f_c = jax.jit(jax.shard_map(
+        lambda g: compressed_pod_mean(g, bases, n_pods=2),
+        mesh=mesh, in_specs=(specs,), out_specs=specs, axis_names={"pod"}, check_vma=False))
+    f_p = jax.jit(jax.shard_map(
+        plain_pod_mean, mesh=mesh, in_specs=(specs,), out_specs=specs,
+        axis_names={"pod"}, check_vma=False))
+
+    out_c, out_p = f_c(grads), f_p(grads)
+    err = max(float(jnp.abs(out_c[k] - out_p[k]).max()) for k in grads)
+    print(f"max |compressed - psum| = {err:.3e} (bf16-transport tolerance)")
+
+    for name, f in [("plain psum", f_p), ("GBDI-FR ring", f_c)]:
+        stats = analyze_module(f.lower(grads).compile().as_text())
+        print(f"{name:14s} cross-pod wire bytes/device: {stats['collectives']['total']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

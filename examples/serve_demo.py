@@ -1,0 +1,43 @@
+"""Serve a small model with batched requests (continuous batching) and
+report what GBDI-FR KV compression saves at production scale.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.models.api import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.kv_cache import KVSpec
+
+
+def main():
+    cfg = reduced(ARCHS["deepseek-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, batch_slots=4, max_len=96)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(i, rng.integers(0, cfg.vocab_size, 12).astype(np.int32), max_new=8)
+        for i in range(4)
+    ]
+    print(f"admitting {eng.admit(reqs)} requests (prefill)")
+    ticks = 0
+    while eng.tick():
+        ticks += 1
+    for r in reqs:
+        print(f"req {r.rid}: generated {r.out}")
+    print(f"decode ticks: {ticks}")
+
+    # what the compressed cache buys at llama3-405b decode scale
+    spec = KVSpec(n_kv=8, head_dim=128, max_len=32768)
+    raw, comp = spec.raw_bytes(128), spec.compressed_bytes(128)
+    print(f"\nKV cache @ llama3-405b decode_32k, one layer, batch 128:")
+    print(f"  raw          {raw/2**30:.2f} GiB")
+    print(f"  GBDI-FR      {comp/2**30:.2f} GiB  ({raw/comp:.2f}x less HBM traffic/step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Core GBDI compression (the paper's contribution) + the B∆I baseline."""
+from repro.core.gbdi import (  # noqa: F401
+    GBDIConfig,
+    GBDIModel,
+    assign,
+    block_sizes_bits,
+    compressed_size_bits,
+    compression_ratio,
+    decode,
+    encode,
+    fit,
+    roundtrip_ok,
+    to_words,
+)
+from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode  # noqa: F401
+from repro.core import bdi  # noqa: F401
+from repro.core.kmeans import fit_bases, fit_bases_host  # noqa: F401

@@ -1,0 +1,71 @@
+"""Bit-granular pack/unpack for the host (paper-faithful) GBDI codec.
+
+The paper's C/C++ engine writes variable-width fields bit-by-bit.  Here the
+same format is produced with vectorised numpy: each field ``i`` occupies
+``widths[i]`` bits, LSB-first, at bit offset ``sum(widths[:i])`` of a little
+endian bit stream (``np.packbits(bitorder='little')``).
+
+Only used on host paths (checkpoints, memory-dump benchmarks).  Device paths
+use the lane-aligned fixed-rate format in :mod:`repro.core.gbdi_fr`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Process this many fields per chunk so the (chunk, max_width) scratch
+# matrices stay small even for multi-GB dumps.
+_CHUNK = 1 << 16
+
+
+def pack_bits(values: np.ndarray, widths: np.ndarray) -> tuple[np.ndarray, int]:
+    """Pack ``values[i]`` into ``widths[i]`` bits each (LSB-first).
+
+    Returns ``(bytestream, total_bits)``.  Bits of ``values[i]`` above
+    ``widths[i]`` must already be zero (callers mask); widths of 0 emit
+    nothing (used for the zero-word code).
+    """
+    values = np.ascontiguousarray(values, dtype=np.uint64)
+    widths = np.ascontiguousarray(widths, dtype=np.int64)
+    if values.shape != widths.shape or values.ndim != 1:
+        raise ValueError("values/widths must be equal-length 1-D arrays")
+    total_bits = int(widths.sum())
+    out = np.zeros((total_bits + 7) // 8 * 8, dtype=np.uint8)  # bit array
+    offsets = np.zeros(len(widths) + 1, dtype=np.int64)
+    np.cumsum(widths, out=offsets[1:])
+    for lo in range(0, len(values), _CHUNK):
+        hi = min(lo + _CHUNK, len(values))
+        v, w, off = values[lo:hi], widths[lo:hi], offsets[lo:hi]
+        nmax = int(w.max()) if len(w) else 0
+        if nmax == 0:
+            continue
+        bitidx = np.arange(nmax, dtype=np.uint64)
+        bits = ((v[:, None] >> bitidx[None, :]) & np.uint64(1)).astype(np.uint8)
+        mask = bitidx[None, :].astype(np.int64) < w[:, None]
+        pos = off[:, None] + np.arange(nmax, dtype=np.int64)[None, :]
+        out[pos[mask]] = bits[mask]
+    return np.packbits(out[:total_bits], bitorder="little"), total_bits
+
+
+def unpack_bits(data: np.ndarray, widths: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_bits`: returns uint64 values, one per width."""
+    widths = np.ascontiguousarray(widths, dtype=np.int64)
+    total_bits = int(widths.sum())
+    bits = np.unpackbits(
+        np.ascontiguousarray(data, dtype=np.uint8), bitorder="little"
+    )[:total_bits].astype(np.uint64)
+    offsets = np.zeros(len(widths) + 1, dtype=np.int64)
+    np.cumsum(widths, out=offsets[1:])
+    out = np.zeros(len(widths), dtype=np.uint64)
+    for lo in range(0, len(widths), _CHUNK):
+        hi = min(lo + _CHUNK, len(widths))
+        w, off = widths[lo:hi], offsets[lo:hi]
+        nmax = int(w.max()) if len(w) else 0
+        if nmax == 0:
+            continue
+        col = np.arange(nmax, dtype=np.int64)
+        idx = off[:, None] + col[None, :]
+        valid = col[None, :] < w[:, None]
+        idx = np.where(valid, idx, 0)
+        contrib = (bits[idx] * valid.astype(np.uint64)) << col[None, :].astype(np.uint64)
+        out[lo:hi] = contrib.sum(axis=1, dtype=np.uint64)
+    return out

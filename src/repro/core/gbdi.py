@@ -1,0 +1,288 @@
+"""GBDI — Global Bases Delta Immediate compression (paper-faithful core).
+
+Format (per the paper §II / HPCA'22):
+
+* the input is a stream of ``word_bits``-wide words grouped into blocks of
+  ``block_words`` (default 16 x 32-bit = 64 B, a cache block);
+* a table of ``num_bases`` global bases is fit offline by modified k-means
+  (:mod:`repro.core.kmeans`); each base is paired with one delta-width class
+  from ``width_set`` ("maximum deltas");
+* each word encodes as a base pointer (``ptr_bits``) plus a two's-complement
+  delta of its base's width.  Two reserved pointer codes cover the all-zero
+  word (no payload) and outliers (verbatim ``word_bits`` payload);
+* compressed size = pointer stream + payload stream + the global table.
+  Per-block sizes are also reported (hardware keeps them in translation
+  metadata; they are excluded from CR like the paper excludes page tables).
+
+The *assignment* math (codes/deltas/sizes) is pure jnp and jit-able — it is
+shared by the host codec below, the fixed-rate device format
+(:mod:`repro.core.gbdi_fr`) and the Pallas kernel oracle
+(:mod:`repro.kernels.ref`).  The bit-granular pack/unpack runs on host via
+:mod:`repro.core.bitpack` because variable-length output has no static shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.core.kmeans import (
+    delta_magnitude,
+    fit_bases_host,
+    width_cost,
+    wrapped_delta,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GBDIConfig:
+    word_bits: int = 32
+    block_words: int = 16
+    num_bases: int = 30           # +2 reserved codes -> 32 codes, 5-bit pointers
+    width_set: tuple[int, ...] = (4, 8, 16, 24)
+    kmeans_iters: int = 12
+    sample_words: int = 1 << 16
+    modified_kmeans: bool = True  # paper: modified beats vanilla
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.word_bits not in (16, 32):
+            raise ValueError("word_bits must be 16 or 32")
+        if any(w >= self.word_bits for w in self.width_set):
+            raise ValueError("delta widths must be narrower than the word")
+
+    @property
+    def ptr_bits(self) -> int:
+        return max(1, math.ceil(math.log2(self.num_bases + 2)))
+
+    @property
+    def zero_code(self) -> int:
+        return self.num_bases
+
+    @property
+    def outlier_code(self) -> int:
+        return self.num_bases + 1
+
+    @property
+    def table_bits(self) -> int:
+        # base values + 2-bit width-class index per base
+        return self.num_bases * (self.word_bits + max(2, math.ceil(math.log2(len(self.width_set)))))
+
+
+@dataclasses.dataclass(frozen=True)
+class GBDIModel:
+    """Fitted global state: the base table and paired widths."""
+    config: GBDIConfig
+    bases: np.ndarray   # (k,) int32 (signed view of the word bit pattern)
+    widths: np.ndarray  # (k,) int32, each from config.width_set
+
+
+# ---------------------------------------------------------------------------
+# jnp assignment core (shared with gbdi_fr / kernels)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("word_bits",))
+def assign(
+    values: jax.Array,      # (n,) int32 word bit patterns
+    bases: jax.Array,       # (k,) int32
+    base_widths: jax.Array, # (k,) int32
+    *,
+    word_bits: int,
+) -> dict[str, jax.Array]:
+    """Per-word GBDI assignment: code, delta and payload width.
+
+    code in [0, k) selects a base; code == k is the zero word; code == k+1
+    is an outlier (verbatim payload).  Chooses the *narrowest* fitting base
+    (ties broken by argmin order — same width => same encoded size).
+    """
+    k = bases.shape[0]
+    d = wrapped_delta(values, bases, word_bits)             # (n, k)
+    m = delta_magnitude(d)
+    half = (1 << (base_widths - 1)).astype(jnp.int32)       # (k,)
+    fits = m < half[None, :]
+    cost = jnp.where(fits, base_widths[None, :], jnp.int32(word_bits + 1))
+    best = jnp.argmin(cost, axis=1)
+    best_cost = jnp.take_along_axis(cost, best[:, None], axis=1)[:, 0]
+    best_delta = jnp.take_along_axis(d, best[:, None], axis=1)[:, 0]
+    is_outlier = best_cost > word_bits
+    is_zero = values == 0
+    code = jnp.where(is_outlier, jnp.int32(k + 1), best.astype(jnp.int32))
+    code = jnp.where(is_zero, jnp.int32(k), code)
+    payload_width = jnp.where(is_outlier, jnp.int32(word_bits), best_cost)
+    payload_width = jnp.where(is_zero, jnp.int32(0), payload_width)
+    delta = jnp.where(is_outlier | is_zero, jnp.int32(0), best_delta)
+    return {"code": code, "delta": delta, "payload_width": payload_width}
+
+
+@functools.partial(jax.jit, static_argnames=("word_bits", "block_words", "ptr_bits"))
+def block_sizes_bits(
+    values: jax.Array,
+    bases: jax.Array,
+    base_widths: jax.Array,
+    *,
+    word_bits: int,
+    block_words: int,
+    ptr_bits: int,
+) -> jax.Array:
+    """Exact encoded bits per block (the size model used everywhere)."""
+    a = assign(values, bases, base_widths, word_bits=word_bits)
+    per_word = ptr_bits + a["payload_width"]
+    n_blocks = values.shape[0] // block_words
+    return per_word[: n_blocks * block_words].reshape(n_blocks, block_words).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# dtype <-> word-stream helpers
+# ---------------------------------------------------------------------------
+
+def to_words(arr: np.ndarray | bytes, word_bits: int = 32) -> np.ndarray:
+    """View any buffer/array as a stream of unsigned words (zero-padded).
+
+    Mirrors the paper's treatment of a memory dump as raw 32-bit words; ML
+    tensors (fp32/bf16/int) pass through by bit pattern, so compression is
+    bit-exact for them too.
+    """
+    if isinstance(arr, (bytes, bytearray)):
+        buf = np.frombuffer(bytes(arr), dtype=np.uint8)
+    else:
+        buf = np.ascontiguousarray(arr)
+        buf = buf.view(np.uint8).reshape(-1)
+    word_bytes = word_bits // 8
+    pad = (-buf.size) % word_bytes
+    if pad:
+        buf = np.concatenate([buf, np.zeros(pad, dtype=np.uint8)])
+    return buf.view(np.uint16 if word_bits == 16 else np.uint32)
+
+
+def words_to_signed(words: np.ndarray, word_bits: int) -> np.ndarray:
+    """Unsigned word patterns -> int32 signed view used by the jnp core."""
+    if word_bits == 32:
+        return words.astype(np.uint32).view(np.int32)
+    return words.astype(np.int32)  # 16-bit words zero-extended
+
+
+def signed_to_words(signed: np.ndarray, word_bits: int) -> np.ndarray:
+    if word_bits == 32:
+        return signed.astype(np.int32).view(np.uint32)
+    return (signed.astype(np.int64) & 0xFFFF).astype(np.uint16)
+
+
+# ---------------------------------------------------------------------------
+# fit / encode / decode (host, paper-faithful, bit-granular, lossless)
+# ---------------------------------------------------------------------------
+
+def fit(data: np.ndarray | bytes, config: GBDIConfig = GBDIConfig()) -> GBDIModel:
+    """Offline "background data analysis": fit the global base table."""
+    words = to_words(data, config.word_bits)
+    bases, widths = fit_bases_host(
+        words_to_signed(words, config.word_bits),
+        num_bases=config.num_bases,
+        width_set=config.width_set,
+        word_bits=config.word_bits,
+        iters=config.kmeans_iters,
+        sample_words=config.sample_words,
+        modified=config.modified_kmeans,
+        seed=config.seed,
+    )
+    return GBDIModel(config=config, bases=bases, widths=widths)
+
+
+def encode(data: np.ndarray | bytes, model: GBDIModel) -> dict[str, Any]:
+    """Compress to the bit-granular GBDI format.  Lossless."""
+    cfg = model.config
+    words = to_words(data, cfg.word_bits)
+    signed = words_to_signed(words, cfg.word_bits)
+    a = jax.device_get(
+        assign(
+            jnp.asarray(signed),
+            jnp.asarray(model.bases),
+            jnp.asarray(model.widths),
+            word_bits=cfg.word_bits,
+        )
+    )
+    code, delta, pw = a["code"], a["delta"], a["payload_width"]
+    ptr_stream, ptr_bits_total = bitpack.pack_bits(
+        code.astype(np.uint64), np.full(code.shape, cfg.ptr_bits, np.int64)
+    )
+    # payload: two's-complement delta in pw bits; outliers carry the raw word
+    payload_vals = (delta.astype(np.int64) & ((1 << np.maximum(pw, 1).astype(np.int64)) - 1)).astype(np.uint64)
+    is_outlier = code == cfg.outlier_code
+    payload_vals[is_outlier] = words.astype(np.uint64)[is_outlier]
+    payload_stream, payload_bits_total = bitpack.pack_bits(payload_vals, pw.astype(np.int64))
+    return {
+        "ptr_stream": ptr_stream,
+        "payload_stream": payload_stream,
+        "n_words": int(words.size),
+        "ptr_bits_total": int(ptr_bits_total),
+        "payload_bits_total": int(payload_bits_total),
+        "bases": model.bases,
+        "widths": model.widths,
+        "config": cfg,
+    }
+
+
+def decode(blob: dict[str, Any]) -> np.ndarray:
+    """Reconstruct the exact original word stream."""
+    cfg: GBDIConfig = blob["config"]
+    n = blob["n_words"]
+    codes = bitpack.unpack_bits(
+        blob["ptr_stream"], np.full(n, cfg.ptr_bits, np.int64)
+    ).astype(np.int64)
+    widths_tbl = np.asarray(blob["widths"], dtype=np.int64)
+    pw = np.zeros(n, dtype=np.int64)
+    is_base = codes < cfg.num_bases
+    is_outlier = codes == cfg.outlier_code
+    pw[is_base] = widths_tbl[codes[is_base]]
+    pw[is_outlier] = cfg.word_bits
+    payload = bitpack.unpack_bits(blob["payload_stream"], pw).astype(np.int64)
+    # sign-extend deltas
+    half = np.where(pw > 0, np.int64(1) << np.maximum(pw - 1, 0), 1)
+    delta = np.where(payload >= half, payload - (np.int64(1) << np.maximum(pw, 1)), payload)
+    bases = np.asarray(blob["bases"], dtype=np.int64)
+    mask = (1 << cfg.word_bits) - 1
+    vals = np.zeros(n, dtype=np.int64)
+    vals[is_base] = (bases[codes[is_base]] + delta[is_base]) & mask
+    vals[is_outlier] = payload[is_outlier] & mask
+    dt = np.uint16 if cfg.word_bits == 16 else np.uint32
+    return vals.astype(dt)
+
+
+def compressed_size_bits(blob: dict[str, Any]) -> int:
+    cfg: GBDIConfig = blob["config"]
+    return blob["ptr_bits_total"] + blob["payload_bits_total"] + cfg.table_bits
+
+
+def compression_ratio(blob: dict[str, Any]) -> float:
+    cfg: GBDIConfig = blob["config"]
+    return blob["n_words"] * cfg.word_bits / max(1, compressed_size_bits(blob))
+
+
+def roundtrip_ok(data: np.ndarray | bytes, model: GBDIModel) -> bool:
+    words = to_words(data, model.config.word_bits)
+    return bool(np.array_equal(decode(encode(data, model)), words))
+
+
+__all__ = [
+    "GBDIConfig",
+    "GBDIModel",
+    "assign",
+    "block_sizes_bits",
+    "fit",
+    "encode",
+    "decode",
+    "compressed_size_bits",
+    "compression_ratio",
+    "roundtrip_ok",
+    "to_words",
+    "words_to_signed",
+    "signed_to_words",
+    "delta_magnitude",
+    "width_cost",
+    "wrapped_delta",
+]

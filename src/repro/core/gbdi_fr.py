@@ -1,0 +1,238 @@
+"""GBDI-FR — fixed-rate TPU page format (device regime of the paper's idea).
+
+Inside a jitted program every buffer is static-shaped, so the paper's
+variable-length bit stream cannot shrink a device buffer.  GBDI-FR keeps the
+paper's core insight — global bases + narrow deltas + explicit outliers —
+but re-tiles it into a fixed-rate page so it can live in HBM, be sharded by
+pjit, and be produced/consumed by a Pallas kernel:
+
+* a page is ``page_words`` words; every word stores a ``ptr_bits`` pointer
+  and a ``delta_bits`` two's-complement delta, lane-packed into int32 lanes;
+* a fixed-capacity outlier table (``outlier_cap`` slots of full words +
+  positions) holds the words that fit no base — the paper's outlier class
+  with a hardware-friendly bound;
+* pages are **capacity-bounded lossless**: bit-exact whenever a page has at
+  most ``outlier_cap`` outliers.  Overflowing words are deterministically
+  re-coded as nearest-base + clamped delta at *encode* time (so decode is
+  always well defined); the drop count is reported and is ~0 for the
+  gradient/KV distributions this path serves (measured in benchmarks).
+
+This module is the pure-jnp oracle for the Pallas kernels in
+:mod:`repro.kernels` — the kernels must match it bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import delta_magnitude, wrapped_delta
+
+
+@dataclasses.dataclass(frozen=True)
+class FRConfig:
+    """Defaults target bf16 tensors (KV cache, gradient transport).
+
+    bf16 words have a 7-bit mantissa, so one global base per hot
+    (sign, exponent) bucket plus 8-bit deltas covers a full bucket —
+    k-means finds exactly those buckets.  fp32 *noise* mantissas (23
+    uniform bits) cannot be covered by narrow bit-pattern deltas at a
+    useful rate (measured in benchmarks); fp32 paths should transport
+    in bf16 (standard for gradients) or use the host variable-length
+    codec where zeros/ints/pointers dominate (checkpoints, dumps).
+    """
+    word_bits: int = 16        # 16 for bf16 views, 32 for fp32/int32 views
+    page_words: int = 2048
+    num_bases: int = 14        # +zero+outlier -> 16 codes -> 4-bit pointers
+    delta_bits: int = 8        # lane-packable: one of 4, 8, 16
+    outlier_cap: int = 64      # full-width slots per page (3.1% of 2048)
+
+    def __post_init__(self):
+        if self.word_bits not in (16, 32):
+            raise ValueError("word_bits must be 16 or 32")
+        if 32 % self.delta_bits or self.delta_bits >= self.word_bits:
+            raise ValueError("delta_bits must divide 32 and be < word_bits")
+        if 32 % self.ptr_bits:
+            raise ValueError("num_bases+2 must pack into int32 lanes")
+        if self.page_words % 128:
+            raise ValueError("page_words must be lane-aligned (multiple of 128)")
+
+    @property
+    def ptr_bits(self) -> int:
+        return max(1, math.ceil(math.log2(self.num_bases + 2)))
+
+    @property
+    def zero_code(self) -> int:
+        return self.num_bases
+
+    @property
+    def outlier_code(self) -> int:
+        return self.num_bases + 1
+
+    @property
+    def ptr_lanes(self) -> int:
+        return self.page_words * self.ptr_bits // 32
+
+    @property
+    def delta_lanes(self) -> int:
+        return self.page_words * self.delta_bits // 32
+
+    def compressed_bytes_per_page(self) -> int:
+        # ptr lanes + delta lanes + outlier values + outlier positions + count
+        out_val_bytes = self.outlier_cap * (self.word_bits // 8)
+        out_idx_bytes = self.outlier_cap * 2  # fits int16 positions
+        return 4 * (self.ptr_lanes + self.delta_lanes) + out_val_bytes + out_idx_bytes + 4
+
+    def ratio(self) -> float:
+        return (self.page_words * self.word_bits / 8) / self.compressed_bytes_per_page()
+
+
+# ---------------------------------------------------------------------------
+# lane packing (32 % bits == 0)
+# ---------------------------------------------------------------------------
+
+def pack_lanes(x: jax.Array, bits: int) -> jax.Array:
+    """Pack (..., n) unsigned fields < 2**bits into (..., n*bits/32) int32."""
+    per = 32 // bits
+    y = x.astype(jnp.uint32).reshape(*x.shape[:-1], -1, per)
+    sh = (jnp.arange(per, dtype=jnp.uint32) * bits)
+    return (y << sh).sum(axis=-1, dtype=jnp.uint32).astype(jnp.int32)
+
+
+def unpack_lanes(p: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of pack_lanes -> (..., n) uint32 fields."""
+    per = 32 // bits
+    sh = (jnp.arange(per, dtype=jnp.uint32) * bits)
+    fields = (p.astype(jnp.uint32)[..., None] >> sh) & jnp.uint32((1 << bits) - 1)
+    return fields.reshape(*p.shape[:-1], -1)[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# single-page encode/decode (vmapped below)
+# ---------------------------------------------------------------------------
+
+def _encode_page(x: jax.Array, bases: jax.Array, cfg: FRConfig) -> dict[str, jax.Array]:
+    P, cap, wb = cfg.page_words, cfg.outlier_cap, cfg.word_bits
+    d = wrapped_delta(x, bases, wb)                      # (P, k)
+    m = delta_magnitude(d)
+    half = 1 << (cfg.delta_bits - 1)
+    fits = m < half
+    nearest = jnp.argmin(m, axis=1)                      # for clamped fallback
+    mk = jnp.where(fits, m, jnp.int32(2**31 - 1))
+    best = jnp.argmin(mk, axis=1)
+    any_fit = fits[jnp.arange(P), best]
+    is_zero = x == 0
+    is_out = (~any_fit) & (~is_zero)
+
+    # outlier compaction: page-order slots, overflow re-coded as clamped delta
+    pos = jnp.cumsum(is_out.astype(jnp.int32)) - 1
+    in_table = is_out & (pos < cap)
+    dropped = is_out & ~in_table
+    slot = jnp.where(in_table, pos, cap)                 # cap = scratch slot
+    out_vals = jnp.zeros(cap + 1, jnp.int32).at[slot].set(jnp.where(in_table, x, 0))[:cap]
+    out_idx = jnp.zeros(cap + 1, jnp.int32).at[slot].set(
+        jnp.where(in_table, jnp.arange(P, dtype=jnp.int32), 0)
+    )[:cap]
+    n_out = jnp.minimum(is_out.sum(dtype=jnp.int32), cap)
+
+    base_sel = jnp.where(dropped, nearest, best)
+    delta = jnp.take_along_axis(d, base_sel[:, None], axis=1)[:, 0]
+    delta = jnp.clip(delta, -half, half - 1)             # exact when it fits
+    code = jnp.where(is_zero, jnp.int32(cfg.zero_code), base_sel.astype(jnp.int32))
+    code = jnp.where(in_table, jnp.int32(cfg.outlier_code), code)
+    payload = jnp.where(
+        (code == cfg.zero_code) | (code == cfg.outlier_code), 0, delta
+    ).astype(jnp.uint32) & jnp.uint32((1 << cfg.delta_bits) - 1)
+
+    return {
+        "ptrs": pack_lanes(code.astype(jnp.uint32), cfg.ptr_bits),
+        "deltas": pack_lanes(payload, cfg.delta_bits),
+        "out_vals": out_vals,
+        "out_idx": out_idx,
+        "n_out": n_out,
+        "n_dropped": dropped.sum(dtype=jnp.int32),
+    }
+
+
+def _decode_page(blob: dict[str, jax.Array], bases: jax.Array, cfg: FRConfig) -> jax.Array:
+    P, wb = cfg.page_words, cfg.word_bits
+    code = unpack_lanes(blob["ptrs"], cfg.ptr_bits, P).astype(jnp.int32)
+    raw = unpack_lanes(blob["deltas"], cfg.delta_bits, P).astype(jnp.int32)
+    half = 1 << (cfg.delta_bits - 1)
+    delta = jnp.where(raw >= half, raw - (1 << cfg.delta_bits), raw)
+    base_code = jnp.clip(code, 0, cfg.num_bases - 1)
+    val = bases[base_code] + delta
+    if wb == 16:
+        val = val & 0xFFFF
+    val = jnp.where(code == cfg.zero_code, 0, val)
+    # outlier scatter-back (only slots < n_out are live)
+    live = jnp.arange(cfg.outlier_cap) < blob["n_out"]
+    onehot = (jnp.arange(P)[:, None] == blob["out_idx"][None, :]) & live[None, :]
+    out_contrib = (onehot.astype(jnp.int32) * blob["out_vals"][None, :]).sum(axis=1)
+    is_out_pos = onehot.any(axis=1)
+    return jnp.where(is_out_pos, out_contrib, jnp.where(code == cfg.outlier_code, 0, val))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fr_encode(x: jax.Array, bases: jax.Array, cfg: FRConfig) -> dict[str, jax.Array]:
+    """Encode (n_pages, page_words) int32 word pages. Pure jnp oracle."""
+    return jax.vmap(lambda p: _encode_page(p, bases, cfg))(x)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fr_decode(blob: dict[str, jax.Array], bases: jax.Array, cfg: FRConfig) -> jax.Array:
+    return jax.vmap(lambda b: _decode_page(b, bases, cfg))(blob)
+
+
+# ---------------------------------------------------------------------------
+# tensor-level wrappers (floats by bit pattern, like the paper's memory words)
+# ---------------------------------------------------------------------------
+
+def tensor_to_pages(x: jax.Array, cfg: FRConfig) -> tuple[jax.Array, dict]:
+    """Bitcast any tensor to (n_pages, page_words) int32 word pages."""
+    flat = x.reshape(-1)
+    if x.dtype == jnp.float32:
+        words = jax.lax.bitcast_convert_type(flat, jnp.int32)
+    elif x.dtype == jnp.bfloat16:
+        words = jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.int32)
+    elif x.dtype in (jnp.int32, jnp.uint32):
+        words = flat.astype(jnp.int32)
+    else:
+        raise ValueError(f"unsupported dtype {x.dtype}")
+    expect = 16 if x.dtype == jnp.bfloat16 else 32
+    if expect != cfg.word_bits:
+        raise ValueError(f"dtype {x.dtype} needs word_bits={expect}")
+    pad = (-words.shape[0]) % cfg.page_words
+    words = jnp.pad(words, (0, pad))
+    meta = {"shape": x.shape, "dtype": x.dtype, "n": flat.shape[0]}
+    return words.reshape(-1, cfg.page_words), meta
+
+
+def pages_to_tensor(words: jax.Array, meta: dict, cfg: FRConfig) -> jax.Array:
+    flat = words.reshape(-1)[: meta["n"]]
+    if meta["dtype"] == jnp.float32:
+        out = jax.lax.bitcast_convert_type(flat, jnp.float32)
+    elif meta["dtype"] == jnp.bfloat16:
+        out = jax.lax.bitcast_convert_type(flat.astype(jnp.uint16), jnp.bfloat16)
+    else:
+        out = flat.astype(meta["dtype"])
+    return out.reshape(meta["shape"])
+
+
+def fit_fr_bases(sample_words: jax.Array, cfg: FRConfig, iters: int = 8) -> jax.Array:
+    """Refit FR bases from live tensor words (the trainer/serving hook)."""
+    from repro.core.kmeans import fit_bases
+
+    flat = sample_words.reshape(-1)
+    bases, _ = fit_bases(
+        flat,
+        num_bases=cfg.num_bases,
+        width_set=(cfg.delta_bits,),
+        word_bits=cfg.word_bits,
+        iters=iters,
+        modified=True,
+    )
+    return bases

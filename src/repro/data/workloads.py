@@ -1,0 +1,142 @@
+"""Synthetic memory-dump workload classes (paper §V "Data Selection").
+
+The paper's inputs are ELF memory dumps of SPEC CPU 2017 / PARSEC / Java
+workloads from a university server we do not have.  Each generator below
+reproduces the documented *value structure* of its benchmark family —
+what GBDI's compression ratio actually depends on — so EXPERIMENTS.md
+validates CR bands, not exact per-file numbers (see DESIGN.md §7):
+
+  * C/C++ heaps: pointers clustered in a few mmap regions, small ints,
+    zero pages, struct padding;
+  * JVM heaps additionally repeat object-header words (class pointers,
+    mark words) — the reason the paper measures higher Java CR (1.55x)
+    than C CR (1.4x).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _interleave(rng, parts):
+    """Concatenate in 64-byte-block units and shuffle blocks, like pages of
+    a real heap mixing allocation types."""
+    blocks = []
+    for arr in parts:
+        a = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+        pad = (-a.size) % 64
+        if pad:
+            a = np.concatenate([a, np.zeros(pad, np.uint8)])
+        blocks.append(a.reshape(-1, 64))
+    all_blocks = np.concatenate(blocks)
+    rng.shuffle(all_blocks)
+    return all_blocks.reshape(-1).view(np.uint32)
+
+
+def spec_mcf(rng, n_bytes):
+    """Pointer-chasing graph: node structs = {ptr, ptr, int, int}."""
+    n = n_bytes // 16
+    heap = np.uint64(0x7F3A_0000_0000)
+    ptrs1 = (heap + rng.integers(0, 1 << 26, n).astype(np.uint64) * 16).view(np.uint64)
+    ptrs2 = (heap + rng.integers(0, 1 << 26, n).astype(np.uint64) * 16).view(np.uint64)
+    ints = rng.integers(0, 4000, (n, 2)).astype(np.int32)
+    rec = np.empty((n, 4), np.uint32)
+    rec[:, 0] = (ptrs1 & 0xFFFFFFFF).astype(np.uint32)
+    rec[:, 1] = (ptrs1 >> 32).astype(np.uint32)
+    rec[:, 2:] = ints.view(np.uint32).reshape(n, 2)
+    del ptrs2
+    return _interleave(rng, [rec, np.zeros(n // 4, np.uint32)])
+
+
+def spec_perlbench(rng, n_bytes):
+    """Strings + tagged SV pointers."""
+    n = n_bytes // 4
+    ascii_ = rng.integers(32, 127, n // 2).astype(np.uint8)
+    text = np.frombuffer(ascii_.tobytes() * 4, dtype=np.uint32)[: n // 2]
+    svs = (0x5601_0000 + rng.integers(0, 1 << 20, n // 3) * 8).astype(np.uint32)
+    return _interleave(rng, [text, svs, np.zeros(n // 8, np.uint32)])
+
+
+def spec_omnetpp(rng, n_bytes):
+    """Discrete-event objects: doubles (times in a narrow range) + ptrs."""
+    n = n_bytes // 8
+    times = (1e6 + rng.random(n // 2) * 1e3).astype(np.float64)
+    ptrs = (0x6100_0000 + rng.integers(0, 1 << 22, n // 2) * 8).astype(np.uint32)
+    return _interleave(rng, [times.view(np.uint32), ptrs, np.zeros(n // 6, np.uint32)])
+
+
+def spec_deepsjeng(rng, n_bytes):
+    """Chess bitboards: sparse uint64, many zero words, small ints."""
+    n = n_bytes // 8
+    boards = rng.integers(0, 2, (n // 2, 64)).astype(np.uint8)
+    bb = np.packbits(boards, axis=1).view(np.uint64)[:, 0]
+    bb = np.where(rng.random(n // 2) < 0.5, 0, bb)
+    scores = rng.integers(-2000, 2000, n // 2).astype(np.int32)
+    return _interleave(rng, [bb.view(np.uint32), scores.view(np.uint32)])
+
+
+def parsec_fluidanimate(rng, n_bytes):
+    """Particle state: fp32 positions/velocities in a narrow dynamic range."""
+    n = n_bytes // 4
+    pos = (rng.random(n // 2) * 64).astype(np.float32)
+    vel = rng.normal(0, 0.1, n // 2).astype(np.float32)
+    return _interleave(rng, [pos.view(np.uint32), vel.view(np.uint32)])
+
+
+def parsec_freqmine(rng, n_bytes):
+    """FP-growth itemset counters: skewed small ints + node pointers."""
+    n = n_bytes // 4
+    counts = np.minimum(rng.zipf(1.6, n // 2), 1 << 20).astype(np.uint32)
+    nodes = (0x9000_0000 + rng.integers(0, 1 << 18, n // 3) * 32).astype(np.uint32)
+    return _interleave(rng, [counts, nodes, np.zeros(n // 6, np.uint32)])
+
+
+def _jvm_headers(rng, n_objs):
+    """Repeated class-pointer + mark words (the Java-CR story)."""
+    klass = (0x0000_0008_0010_0000 + rng.integers(0, 64, n_objs) * 0x1000).astype(np.uint64)
+    mark = np.full(n_objs, 0x0000_0000_0000_0001, np.uint64)
+    hdr = np.empty((n_objs, 4), np.uint32)
+    hdr[:, 0] = (mark & 0xFFFFFFFF).astype(np.uint32)
+    hdr[:, 1] = (mark >> 32).astype(np.uint32)
+    hdr[:, 2] = (klass & 0xFFFFFFFF).astype(np.uint32)
+    hdr[:, 3] = (klass >> 32).astype(np.uint32)
+    return hdr
+
+
+def java_trianglecount(rng, n_bytes):
+    n = n_bytes // 4
+    adj = rng.integers(0, 1 << 20, n // 2).astype(np.uint32)   # vertex ids
+    hdr = _jvm_headers(rng, n // 8)
+    return _interleave(rng, [adj, hdr, np.zeros(n // 8, np.uint32)])
+
+
+def java_svm(rng, n_bytes):
+    n = n_bytes // 4
+    feats = rng.normal(0, 1, n // 2).astype(np.float32)
+    hdr = _jvm_headers(rng, n // 6)
+    return _interleave(rng, [feats.view(np.uint32), hdr, np.zeros(n // 10, np.uint32)])
+
+
+def java_matrixfactorization(rng, n_bytes):
+    n = n_bytes // 4
+    fac = (rng.random(n // 2).astype(np.float32) * 0.1)
+    idx = rng.integers(0, 1 << 16, n // 4).astype(np.uint32)
+    hdr = _jvm_headers(rng, n // 8)
+    return _interleave(rng, [fac.view(np.uint32), idx, hdr])
+
+
+WORKLOADS = {
+    "605.mcf_s": ("C", spec_mcf),
+    "600.perlbench_s": ("C", spec_perlbench),
+    "620.omnetpp_s": ("C", spec_omnetpp),
+    "631.deepsjeng_s": ("C", spec_deepsjeng),
+    "parsec_fluidanimate": ("C", parsec_fluidanimate),
+    "parsec_freqmine": ("C", parsec_freqmine),
+    "java_trianglecount": ("Java", java_trianglecount),
+    "java_svm": ("Java", java_svm),
+    "java_matrixfactorization": ("Java", java_matrixfactorization),
+}
+
+
+def generate(name: str, n_bytes: int = 4 << 20, seed: int = 0) -> np.ndarray:
+    kind, fn = WORKLOADS[name]
+    return fn(np.random.default_rng(seed ^ hash(name) % (1 << 31)), n_bytes)

@@ -1,0 +1,75 @@
+"""GBDI-FR compressed cross-pod gradient exchange.
+
+The inter-pod links are the slow tier (DCI vs intra-pod ICI), so this is
+where the paper's bandwidth claim lands in a training system: gradients
+cross pods in GBDI-FR compressed form.  Within a pod, reductions stay
+full-precision over fast ICI (left to SPMD).
+
+Mechanics: the grad computation runs under ``jax.shard_map`` manual over
+the ``pod`` axis only (``axis_names={"pod"}``; data/model stay automatic),
+so autodiff's psum never crosses pods.  This module then:
+
+  bf16-cast -> page -> fr_encode -> ppermute(ring over pods) -> fr_decode
+  -> accumulate -> mean
+
+The wire tensors are the *packed int32 lanes + outlier tables*, i.e. the
+collective-permute operands in the HLO shrink by the fixed rate (~2.56x vs
+fp32, ~1.28x vs bf16 transport) — measured in §Roofline/§Perf.
+Capacity-overflow pages degrade gracefully (clamped deltas, counted); the
+validation test compares against plain psum at bf16-transport tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
+
+GRAD_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14, delta_bits=8, outlier_cap=64)
+
+
+def _encode_leaf(g: jax.Array, bases):
+    flat = g.astype(jnp.bfloat16).reshape(-1)
+    words = jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.int32)
+    pad = (-words.shape[0]) % GRAD_FR.page_words
+    words = jnp.pad(words, (0, pad))
+    return fr_encode(words.reshape(-1, GRAD_FR.page_words), bases, GRAD_FR)
+
+
+def _decode_leaf(blob, bases, n, shape, dtype):
+    words = fr_decode(blob, bases, GRAD_FR).reshape(-1)[:n]
+    flat = jax.lax.bitcast_convert_type(words.astype(jnp.uint16), jnp.bfloat16)
+    return flat.astype(dtype).reshape(shape)
+
+
+def compressed_pod_mean(grads, bases, *, axis_name: str = "pod", n_pods: int = 2):
+    """Inside shard_map(manual over ``pod``): ring-exchange compressed grads,
+    return the cross-pod mean.  Exact for in-capacity pages (bf16 transport)."""
+    acc = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    blobs = jax.tree.map(lambda g: _encode_leaf(g, bases), grads,
+                         is_leaf=lambda x: hasattr(x, "shape"))
+    perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
+    cur = blobs
+    for _ in range(n_pods - 1):
+        cur = jax.tree.map(lambda b: jax.lax.ppermute(b, axis_name, perm), cur)
+        decoded = jax.tree.map(
+            lambda g, blob: _decode_leaf(
+                blob, bases, g.size, g.shape, jnp.float32
+            ),
+            grads, cur,
+            is_leaf=lambda x: hasattr(x, "shape"),
+        )
+        acc = jax.tree.map(jnp.add, acc, decoded)
+    return jax.tree.map(lambda a, g: (a / n_pods).astype(g.dtype), acc, grads)
+
+
+def plain_pod_mean(grads, *, axis_name: str = "pod"):
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
+
+
+def compressed_crosspod_mean(grads, bases):
+    """Convenience wrapper used when train_step already runs under a
+    pod-manual shard_map; no-op when there is no pod axis."""
+    return compressed_pod_mean(grads, bases)

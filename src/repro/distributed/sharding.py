@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Weights get TP on the contraction-adjacent dim (mesh axis ``model``) and an
+FSDP-style spread over ``data`` on the other dim, so e.g. llama3-405b's
+810 GB of bf16 params stores at ~3.2 GB/chip on a 16x16 pod.  Every rule is
+a list of candidate PartitionSpecs; the first one whose named axes all
+divide the corresponding dims wins (e.g. mixtral's 8 experts cannot shard
+over model=16, so its expert weights fall back to sharding d_ff instead).
+
+The ``pod`` axis is pure DP: only the batch (and optimizer state, via the
+same spec as params) ever names it.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _fits(mesh: Mesh, shape, spec: P) -> bool:
+    for dim, name in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        size = _axis_size(mesh, name)
+        if size > 1 and dim % size != 0:
+            return False
+    return True
+
+
+def pick_spec(mesh: Mesh, shape, candidates: Sequence[P]) -> P:
+    for spec in candidates:
+        if _fits(mesh, shape, spec):
+            return spec
+    return P()
+
+
+# (parent, leaf) -> candidate specs for the *trailing* dims; leading stacked
+# axes (layer periods) are padded with None automatically.
+_RULES: dict[tuple[str, str], list[tuple]] = {
+    ("attn", "wq"): [("data", "model"), (None, "model"), ()],
+    ("attn", "wk"): [("data", "model"), ("data", None), ()],
+    ("attn", "wv"): [("data", "model"), ("data", None), ()],
+    ("attn", "wo"): [("model", "data"), ("model", None), ()],
+    ("mlp", "wg"): [("data", "model"), (None, "model"), ()],
+    ("mlp", "wu"): [("data", "model"), (None, "model"), ()],
+    ("mlp", "wd"): [("model", "data"), ("model", None), ()],
+    ("moe", "router"): [("data", "model"), ("data", None), ()],
+    ("moe", "wg"): [("model", "data", None), (None, "data", "model"), ()],
+    ("moe", "wu"): [("model", "data", None), (None, "data", "model"), ()],
+    ("moe", "wd"): [("model", None, "data"), (None, "model", "data"), ()],
+    ("mamba", "in_proj"): [("data", "model"), ("data", None), ()],
+    ("mamba", "conv_w"): [(None, "model"), ()],
+    ("mamba", "out_proj"): [("model", "data"), ("model", None), ()],
+    ("mlstm", "up"): [("data", "model"), ()],
+    ("mlstm", "wq"): [("data", "model"), ()],
+    ("mlstm", "wk"): [("data", "model"), ()],
+    ("mlstm", "wv"): [("data", "model"), ()],
+    ("mlstm", "wif"): [("data", None), ()],
+    ("mlstm", "down"): [("model", "data"), ()],
+    ("slstm", "w"): [("data", "model"), ()],
+    ("slstm", "r"): [()],
+    ("slstm", "up"): [("data", "model"), ()],
+    ("slstm", "down"): [("model", "data"), ()],
+    ("", "embed"): [("model", "data"), ("model", None), ()],
+    ("", "head"): [("data", "model"), (None, "model"), ()],
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for part in path:
+        if hasattr(part, "key"):
+            names.append(str(part.key))
+        elif hasattr(part, "name"):
+            names.append(str(part.name))
+        elif hasattr(part, "idx"):
+            names.append(str(part.idx))
+    return names
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    names = _path_names(path)
+    leaf_name = names[-1] if names else ""
+    parent = ""
+    for n in reversed(names[:-1]):
+        if n in ("attn", "mlp", "moe", "mamba", "mlstm", "slstm"):
+            parent = n
+            break
+    key = (parent, leaf_name)
+    if key not in _RULES:
+        if leaf_name in ("embed", "head"):
+            key = ("", leaf_name)
+        else:
+            return P()  # norms, gates, scalars: replicated
+    cands = _RULES[key]
+    shape = leaf.shape
+    # pad candidates with leading Nones for stacked (period) axes
+    padded = []
+    for c in cands:
+        if len(c) <= len(shape):
+            padded.append(P(*((None,) * (len(shape) - len(c)) + tuple(c))))
+    return pick_spec(mesh, shape, padded)
+
+
+def params_shardings(mesh: Mesh, params_shape: Any):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)), params_shape
+    )
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_sharding(mesh: Mesh, batch_shape: Any):
+    """Shard every batch leaf on its leading (batch) dim where divisible."""
+    ba = batch_axes(mesh)
+
+    def spec(leaf):
+        dims = (ba,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, pick_spec(mesh, leaf.shape, [P(*dims), P()]))
+
+    return jax.tree_util.tree_map(spec, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape: Any):
+    """KV/state caches: batch dim over DP axes, heads over model if they
+    divide, else the sequence dim over model (B=1 long-context decode)."""
+    ba = batch_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        leaf_name = names[-1] if names else ""
+        shape = leaf.shape
+        if leaf_name in ("k", "v"):
+            # (periods?, B, S, Kv, hd)
+            off = len(shape) - 4
+            lead = (None,) * off
+            cands = [
+                P(*lead, ba, None, "model", None),
+                P(*lead, ba, "model", None, None),
+                P(*lead, ba, None, None, None),
+                P(*lead, None, "model", None, None),
+                P(),
+            ]
+        elif leaf_name == "state":      # mamba (periods?, B, H, N, P)
+            off = len(shape) - 4
+            lead = (None,) * off
+            cands = [P(*lead, ba, "model", None, None), P(*lead, ba, None, None, None), P()]
+        elif leaf_name in ("C",):       # mlstm (periods?, B, H, dk, dv)
+            off = len(shape) - 4
+            lead = (None,) * off
+            cands = [P(*lead, ba, "model", None, None), P(*lead, ba, None, None, None), P()]
+        elif leaf_name in ("n", "h", "c"):
+            off = len(shape) - 3
+            lead = (None,) * off
+            cands = [P(*lead, ba, "model", None), P(*lead, ba, None, None), P()]
+        elif leaf_name == "conv":       # (periods?, B, w-1, ch)
+            off = len(shape) - 3
+            lead = (None,) * off
+            cands = [P(*lead, ba, None, "model"), P(*lead, ba, None, None), P()]
+        else:
+            cands = [P()]
+        return NamedSharding(mesh, pick_spec(mesh, shape, cands))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

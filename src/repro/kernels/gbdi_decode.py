@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: GBDI-FR page decode.
+
+Decode is the paper's "value reconstruction" engine (§IV.B): global-table
+lookup + delta add + outlier scatter-back.  On TPU the table lookup is a
+one-hot integer multiply-reduce (k is tiny) and the outlier scatter is the
+transpose of the encoder's compaction one-hot — no dynamic gather/scatter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gbdi_fr import FRConfig
+from repro.kernels.gbdi_encode import DEFAULT_PAGES_PER_TILE
+
+
+def _decode_kernel(
+    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, bases_ref, x_ref,
+    *, cfg: FRConfig, k_pad: int,
+):
+    T, P = x_ref.shape
+    cap, db, wb = cfg.outlier_cap, cfg.delta_bits, cfg.word_bits
+    bases = bases_ref[...][0]                              # (k_pad,)
+
+    def unpack(p, bits, n):
+        per = 32 // bits
+        sh = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, None, :]
+        fields = (p.astype(jnp.uint32)[:, :, None] >> sh) & jnp.uint32((1 << bits) - 1)
+        return fields.reshape(T, -1)[:, :n]
+
+    code = unpack(ptr_ref[...], cfg.ptr_bits, P).astype(jnp.int32)
+    raw = unpack(delta_ref[...], db, P).astype(jnp.int32)
+    half = 1 << (db - 1)
+    delta = jnp.where(raw >= half, raw - (1 << db), raw)
+
+    # base lookup as one-hot integer reduce (k_pad is tiny)
+    base_code = jnp.clip(code, 0, cfg.num_bases - 1)
+    onehot_b = (base_code[:, :, None] == jnp.arange(k_pad)[None, None, :]).astype(jnp.int32)
+    base_val = (onehot_b * bases[None, None, :]).sum(axis=2)
+    val = base_val + delta
+    if wb == 16:
+        val = val & 0xFFFF
+    val = jnp.where(code == cfg.zero_code, 0, val)
+
+    live = (jnp.arange(cap)[None, :] < nout_ref[...])       # (T, cap)
+    onehot_o = (
+        (jnp.arange(P, dtype=jnp.int32)[None, :, None] == oidx_ref[...][:, None, :])
+        & live[:, None, :]
+    )
+    out_contrib = (onehot_o.astype(jnp.int32) * oval_ref[...][:, None, :]).sum(axis=2)
+    is_out_pos = onehot_o.any(axis=2)
+    x_ref[...] = jnp.where(
+        is_out_pos, out_contrib, jnp.where(code == cfg.outlier_code, 0, val)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "pages_per_tile", "interpret"))
+def gbdi_decode_pallas(
+    blob: dict[str, jax.Array],
+    bases: jax.Array,
+    cfg: FRConfig,
+    *,
+    pages_per_tile: int = DEFAULT_PAGES_PER_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    n_pages = blob["ptrs"].shape[0]
+    assert n_pages % pages_per_tile == 0
+    T, P, cap = pages_per_tile, cfg.page_words, cfg.outlier_cap
+    k_pad = max(8, -(-cfg.num_bases // 8) * 8)
+    bases_padded = jnp.concatenate(
+        [bases.astype(jnp.int32), jnp.full((k_pad - cfg.num_bases,), bases[0], jnp.int32)]
+    )[None, :]
+    kernel = functools.partial(_decode_kernel, cfg=cfg, k_pad=k_pad)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_pages // T,),
+        in_specs=[
+            pl.BlockSpec((T, cfg.ptr_lanes), lambda i: (i, 0)),
+            pl.BlockSpec((T, cfg.delta_lanes), lambda i: (i, 0)),
+            pl.BlockSpec((T, cap), lambda i: (i, 0)),
+            pl.BlockSpec((T, cap), lambda i: (i, 0)),
+            pl.BlockSpec((T, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, P), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, P), jnp.int32),
+        interpret=interpret,
+    )(
+        blob["ptrs"], blob["deltas"], blob["out_vals"], blob["out_idx"],
+        blob["n_out"][:, None], bases_padded,
+    )

@@ -1,0 +1,162 @@
+"""Fused Pallas kernel: decode attention directly over GBDI-FR pages.
+
+The oracle path (serving/kv_cache.attention_decode) decompresses the cache
+to HBM and then attends — paying raw-cache bytes again.  This kernel keeps
+the win: compressed pages stream HBM->VMEM, decode happens in-register,
+q.K / softmax / .V accumulate in VMEM scratch (flash-decoding style online
+softmax across the page grid).  HBM traffic per step = compressed bytes.
+
+Scope: GQA attention layers with row_words = Kv*hd <= page_words (one or
+more tokens per page) — llama3/qwen3/gemma3-class decode.  Full pages only;
+the caller attends over the raw tail (< page_tokens tokens) and merges the
+two streams with the standard (m, l, acc) softmax-merge identity.
+
+Outputs (acc, m, l) per (batch, kv-head, group): the caller normalises.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gbdi_fr import FRConfig
+
+
+def _decode_words(ptrs, deltas, ovals, oidx, n_out, bases, cfg: FRConfig, k_pad: int):
+    """Inline GBDI-FR page decode (1 page) -> (page_words,) int32 words."""
+    P = cfg.page_words
+
+    def unpack(p, bits):
+        per = 32 // bits
+        sh = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, :]
+        f = (p.astype(jnp.uint32)[:, None] >> sh) & jnp.uint32((1 << bits) - 1)
+        return f.reshape(-1)[:P]
+
+    code = unpack(ptrs, cfg.ptr_bits).astype(jnp.int32)
+    raw = unpack(deltas, cfg.delta_bits).astype(jnp.int32)
+    half = 1 << (cfg.delta_bits - 1)
+    delta = jnp.where(raw >= half, raw - (1 << cfg.delta_bits), raw)
+    onehot_b = (jnp.clip(code, 0, cfg.num_bases - 1)[:, None] == jnp.arange(k_pad)[None, :]).astype(jnp.int32)
+    val = (onehot_b * bases[None, :]).sum(axis=1) + delta
+    if cfg.word_bits == 16:
+        val = val & 0xFFFF
+    val = jnp.where(code == cfg.zero_code, 0, val)
+    live = jnp.arange(cfg.outlier_cap) < n_out
+    onehot_o = (jnp.arange(P, dtype=jnp.int32)[:, None] == oidx[None, :]) & live[None, :]
+    out_contrib = (onehot_o.astype(jnp.int32) * ovals[None, :]).sum(axis=1)
+    is_out = onehot_o.any(axis=1)
+    return jnp.where(is_out, out_contrib, jnp.where(code == cfg.outlier_code, 0, val))
+
+
+def _kernel(
+    pos_ref, q_ref,
+    kp_ref, kd_ref, kov_ref, koi_ref, kno_ref,
+    vp_ref, vd_ref, vov_ref, voi_ref, vno_ref,
+    bases_ref,
+    acc_ref, m_ref, l_ref,
+    *, cfg: FRConfig, k_pad: int, pt: int, n_kv: int, hd: int, groups: int,
+):
+    s = pl.program_id(1)
+    n_slots = pl.num_programs(1)
+    pos = pos_ref[0, 0]
+    bases = bases_ref[...][0]
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kw = _decode_words(kp_ref[...][0, 0], kd_ref[...][0, 0], kov_ref[...][0, 0],
+                       koi_ref[...][0, 0], kno_ref[0, 0], bases, cfg, k_pad)
+    vw = _decode_words(vp_ref[...][0, 0], vd_ref[...][0, 0], vov_ref[...][0, 0],
+                       voi_ref[...][0, 0], vno_ref[0, 0], bases, cfg, k_pad)
+    K = jax.lax.bitcast_convert_type(kw.astype(jnp.uint16), jnp.bfloat16).reshape(pt, n_kv, hd)
+    V = jax.lax.bitcast_convert_type(vw.astype(jnp.uint16), jnp.bfloat16).reshape(pt, n_kv, hd)
+
+    q = q_ref[...].astype(jnp.float32)                        # (1, Kv, G, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bkgh,tkh->bkgt", q, K.astype(jnp.float32)) * scale
+    tok = s * pt + jnp.arange(pt, dtype=jnp.int32)
+    full_page_limit = (pos // pt) * pt                        # tail handled outside
+    valid = tok < full_page_limit
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]  # (1,K,G[,hd])
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    # guard the all-masked case: exp(-1e30 - (-1e30)) must be 0, not 1
+    p = jnp.where(logits <= -1e29, 0.0, jnp.exp(logits - m_new[..., None]))
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_prev * alpha[..., None] + jnp.einsum(
+        "bkgt,tkh->bkgh", p, V.astype(jnp.float32)
+    )
+    del n_slots
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "n_kv", "hd", "groups", "interpret")
+)
+def paged_attention_decode(
+    q: jax.Array,            # (B, Kv, G, hd) f32/bf16
+    pages_k: dict, pages_v: dict, bases: jax.Array, pos: jax.Array,
+    cfg: FRConfig, *, n_kv: int, hd: int, groups: int, interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns un-normalised (acc (B,Kv,G,hd) f32, m (B,Kv,G), l (B,Kv,G))."""
+    B, n_slots = pages_k["ptrs"].shape[:2]
+    pt = cfg.page_words // (n_kv * hd)
+    assert pt >= 1 and cfg.page_words % (n_kv * hd) == 0
+    k_pad = max(8, -(-cfg.num_bases // 8) * 8)
+    bases_p = jnp.concatenate(
+        [bases.astype(jnp.int32), jnp.full((k_pad - cfg.num_bases,), bases[0], jnp.int32)]
+    )[None, :]
+    pos_arr = jnp.full((1, 1), pos, jnp.int32)
+
+    page_specs = lambda lanes: pl.BlockSpec((1, 1, lanes), lambda b, s: (b, s, 0))
+    kernel = functools.partial(
+        _kernel, cfg=cfg, k_pad=k_pad, pt=pt, n_kv=n_kv, hd=hd, groups=groups
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, s: (0, 0)),                      # pos
+            pl.BlockSpec((1, n_kv, groups, hd), lambda b, s: (b, 0, 0, 0)),  # q
+            page_specs(cfg.ptr_lanes), page_specs(cfg.delta_lanes),
+            page_specs(cfg.outlier_cap), page_specs(cfg.outlier_cap),
+            pl.BlockSpec((1, 1), lambda b, s: (b, s)),                       # k n_out
+            page_specs(cfg.ptr_lanes), page_specs(cfg.delta_lanes),
+            page_specs(cfg.outlier_cap), page_specs(cfg.outlier_cap),
+            pl.BlockSpec((1, 1), lambda b, s: (b, s)),                       # v n_out
+            pl.BlockSpec((1, k_pad), lambda b, s: (0, 0)),                   # bases
+        ],
+        out_specs=(
+            pl.BlockSpec((1, n_kv, groups, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, n_kv, groups), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, n_kv, groups), lambda b, s: (b, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, n_kv, groups, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, groups), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, groups), jnp.float32),
+        ),
+        interpret=interpret,
+    )(
+        pos_arr, q.astype(jnp.float32),
+        pages_k["ptrs"], pages_k["deltas"], pages_k["out_vals"], pages_k["out_idx"], pages_k["n_out"],
+        pages_v["ptrs"], pages_v["deltas"], pages_v["out_vals"], pages_v["out_idx"], pages_v["n_out"],
+        bases_p,
+    )
+    return acc, m, l
+
+
+def merge_softmax(acc1, m1, l1, acc2, m2, l2):
+    """Streaming-softmax merge of two partial attention streams."""
+    m = jnp.maximum(m1, m2)
+    a1, a2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    l = l1 * a1 + l2 * a2
+    acc = acc1 * a1[..., None] + acc2 * a2[..., None]
+    return acc, m, l

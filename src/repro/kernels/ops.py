@@ -1,0 +1,59 @@
+"""Public jit'd wrappers around the GBDI-FR codec.
+
+``backend='kernel'`` runs the Pallas kernels (interpret=True on CPU,
+compiled on TPU); ``backend='ref'`` runs the pure-jnp oracle.  Both produce
+bit-identical blobs.  Tensor-level helpers handle dtype bitcasting and page
+padding so callers hand in plain fp32/bf16/int32 tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gbdi_fr import (
+    FRConfig,
+    pages_to_tensor,
+    tensor_to_pages,
+)
+from repro.kernels.gbdi_decode import gbdi_decode_pallas
+from repro.kernels.gbdi_encode import DEFAULT_PAGES_PER_TILE, gbdi_encode_pallas
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def encode_pages(
+    x_pages: jax.Array, bases: jax.Array, cfg: FRConfig, backend: str = "ref"
+) -> dict[str, jax.Array]:
+    if backend == "kernel":
+        return gbdi_encode_pallas(x_pages, bases, cfg, interpret=not _on_tpu())
+    return _ref.encode_ref(x_pages, bases, cfg)
+
+
+def decode_pages(
+    blob: dict[str, jax.Array], bases: jax.Array, cfg: FRConfig, backend: str = "ref"
+) -> jax.Array:
+    if backend == "kernel":
+        return gbdi_decode_pallas(blob, bases, cfg, interpret=not _on_tpu())
+    return _ref.decode_ref(blob, bases, cfg)
+
+
+def encode_tensor(
+    x: jax.Array, bases: jax.Array, cfg: FRConfig, backend: str = "ref"
+) -> tuple[dict[str, jax.Array], dict]:
+    pages, meta = tensor_to_pages(x, cfg)
+    pad = (-pages.shape[0]) % DEFAULT_PAGES_PER_TILE if backend == "kernel" else 0
+    if pad:
+        pages = jnp.pad(pages, ((0, pad), (0, 0)))
+    meta["n_pages"] = pages.shape[0]
+    return encode_pages(pages, bases, cfg, backend), meta
+
+
+def decode_tensor(
+    blob: dict[str, jax.Array], meta: dict, bases: jax.Array, cfg: FRConfig,
+    backend: str = "ref",
+) -> jax.Array:
+    pages = decode_pages(blob, bases, cfg, backend)
+    return pages_to_tensor(pages, meta, cfg)

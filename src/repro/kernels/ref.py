@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the GBDI-FR Pallas kernels.
+
+The oracle *is* the fixed-rate codec in :mod:`repro.core.gbdi_fr` — the
+kernels must reproduce it bit-for-bit (asserted across shape/dtype sweeps in
+``tests/test_kernels.py``).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
+
+
+def encode_ref(x_pages: jax.Array, bases: jax.Array, cfg: FRConfig):
+    return fr_encode(x_pages, bases, cfg)
+
+
+def decode_ref(blob, bases: jax.Array, cfg: FRConfig):
+    return fr_decode(blob, bases, cfg)

@@ -1,0 +1,20 @@
+"""Production meshes.  TPU v5e constants for the roofline live here too.
+
+A function, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device; only dryrun.py forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s, single-link ring assumption (documented)

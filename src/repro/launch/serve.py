@@ -1,0 +1,56 @@
+"""Serving entrypoint: batched continuous-batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \
+      --requests 6 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models.api import build_model
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit("use examples/ for the stub-frontend families")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, batch_slots=args.slots, max_len=args.max_len)
+
+    rng = np.random.default_rng(0)
+    pending = [
+        Request(i, rng.integers(0, cfg.vocab_size, 12).astype(np.int32), max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    done = []
+    while pending or any(r is not None and not r.done for r in eng.slot_req):
+        n = eng.admit(pending)
+        done += pending[:n]
+        pending = pending[n:]
+        while eng.tick():
+            pass
+        if n == 0 and not any(r is not None and not r.done for r in eng.slot_req):
+            break
+    for r in done:
+        print(f"req {r.rid}: {r.out}")
+
+
+if __name__ == "__main__":
+    main()

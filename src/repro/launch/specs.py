@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+Weak-type-correct, shardable, and never allocates: param/optimizer/cache
+trees come from ``jax.eval_shape`` over the real init functions, so the
+dry-run exercises exactly the shapes the runtime would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model, build_model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+I32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, sc: ShapeConfig) -> dict:
+    B, S = sc.global_batch, sc.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        return {
+            "frame_embeds": sds((B, S, cfg.d_model), dt),
+            "targets": sds((B, S, cfg.n_codebooks), I32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "patch_embeds": sds((B, cfg.n_patches, cfg.d_model), dt),
+            "tokens": sds((B, S - cfg.n_patches), I32),
+        }
+    return {"tokens": sds((B, S), I32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, sc: ShapeConfig) -> dict:
+    b = train_batch_specs(cfg, sc)
+    b.pop("targets", None)
+    return b
+
+
+def decode_step_specs(cfg: ModelConfig, sc: ShapeConfig) -> dict:
+    B = sc.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        return {"frame_embeds": sds((B, 1, cfg.d_model), dt)}
+    return {"tokens": sds((B, 1), I32)}
+
+
+def params_specs(model: Model) -> dict:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def opt_state_specs(params) -> dict:
+    return jax.eval_shape(adamw.init_state, params)
+
+
+def cache_specs(model: Model, batch: int, max_len: int) -> dict:
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, sc: ShapeConfig) -> dict:
+    """The full input tree for the cell's step function."""
+    model = build_model(cfg)
+    if sc.kind == "train":
+        p = params_specs(model)
+        return {"params": p, "opt_state": opt_state_specs(p), "batch": train_batch_specs(cfg, sc)}
+    if sc.kind == "prefill":
+        return {
+            "params": params_specs(model),
+            "batch": prefill_batch_specs(cfg, sc),
+            "cache": cache_specs(model, sc.global_batch, sc.seq_len),
+        }
+    return {
+        "params": params_specs(model),
+        "step_in": decode_step_specs(cfg, sc),
+        "cache": cache_specs(model, sc.global_batch, sc.seq_len),
+        "pos": sds((), I32),
+    }

@@ -1,0 +1,163 @@
+"""Public model API: build once from a ModelConfig, use everywhere.
+
+  model = build_model(cfg)
+  params = model.init(key)
+  loss, metrics = model.loss(params, batch)            # train
+  cache, logits = model.prefill(params, batch, cache)  # serving
+  logits, cache = model.decode_step(params, step_in, cache, pos)
+
+Batch layouts by family:
+  LM:    {"tokens": (B,S) int32}                        labels = shifted tokens
+  vlm:   {"patch_embeds": (B,P,d), "tokens": (B,S-P)}   prefix-LM over patches
+  audio: {"frame_embeds": (B,S,d), "targets": (B,S,K)}  K codebook heads
+
+The cross-entropy is computed in a seq-chunked scan so the full (B,S,V)
+logits tensor is never materialised (vocab 262k x 1M tokens would be
+half a terabyte) — logits live per-chunk, vocab-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Params,
+    constrain_batch,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from repro.models.transformer import stack_apply, stack_cache_init, stack_init
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (seq-chunked CE)."""
+    for c in range(min(target, S), 0, -1):
+        if S % c == 0:
+            return c
+    return S
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ke, ks, kh = jax.random.split(key, 3)
+        p: Params = {"stack": stack_init(ks, cfg, dtype), "final_norm": rmsnorm_init(cfg.d_model, dtype)}
+        if cfg.family != "audio":
+            p["embed"] = (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype)
+        if not cfg.tied_embeddings:
+            n_heads = max(1, cfg.n_codebooks)
+            shape = (n_heads, cfg.d_model, cfg.vocab_size) if cfg.n_codebooks else (cfg.d_model, cfg.vocab_size)
+            p["head"] = dense_init(kh, shape, dtype, in_axis=1 if cfg.n_codebooks else 0)
+        return p
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed_inputs(self, p: Params, batch: dict) -> tuple[jax.Array, int]:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return batch["frame_embeds"].astype(jnp.dtype(cfg.dtype)), 0
+        tok = p["embed"][batch["tokens"]]
+        if cfg.family == "vlm" and "patch_embeds" in batch:  # absent in decode
+            x = jnp.concatenate([batch["patch_embeds"].astype(tok.dtype), tok], axis=1)
+            return x, cfg.n_patches
+        return tok, 0
+
+    def _head(self, p: Params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.tied_embeddings:
+            return jnp.einsum("bsd,vd->bsv", h, p["embed"])
+        if cfg.n_codebooks:
+            return jnp.einsum("bsd,kdv->bskv", h, p["head"])
+        return jnp.einsum("bsd,dv->bsv", h, p["head"])
+
+    # -- forward ------------------------------------------------------------
+    def hidden(self, p: Params, batch: dict, *, cache=None, cache_pos=None, mode="train"):
+        cfg = self.cfg
+        x, prefix_len = self._embed_inputs(p, batch)
+        x = constrain_batch(x, cfg)
+        S = x.shape[1]
+        if mode == "decode":
+            positions = jnp.asarray([cache_pos], jnp.int32) if jnp.ndim(cache_pos) == 0 else cache_pos
+        else:
+            positions = jnp.arange(S, dtype=jnp.int32)
+        x, new_cache, aux = stack_apply(
+            p["stack"], cfg, x, positions,
+            prefix_len=prefix_len, cache=cache, cache_pos=cache_pos, mode=mode,
+        )
+        return rmsnorm(p["final_norm"], x, cfg.norm_eps), new_cache, aux, prefix_len
+
+    def forward(self, p: Params, batch: dict) -> jax.Array:
+        h, _, _, _ = self.hidden(p, batch)
+        return self._head(p, h)
+
+    # -- loss (seq-chunked CE) -----------------------------------------------
+    def loss(self, p: Params, batch: dict) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        h, _, aux, prefix_len = self.hidden(p, batch, mode="train")
+        # next-token targets via roll + zero weight on the last position, so
+        # the chunked scan sees the full (divisible) sequence length
+        if cfg.family == "audio":
+            h_in = h
+            t_in = jnp.roll(batch["targets"], -1, axis=1)
+        elif cfg.family == "vlm":
+            h_in = h[:, prefix_len:]
+            t_in = jnp.roll(batch["tokens"], -1, axis=1)
+        else:
+            h_in = h
+            t_in = jnp.roll(batch["tokens"], -1, axis=1)
+        t_in = jnp.maximum(t_in, 0)
+        S = h_in.shape[1]
+        w_in = jnp.ones((S,), jnp.float32).at[-1].set(0.0)
+        C = _pick_chunk(S, cfg.loss_chunk)
+        n = S // C
+
+        def ce_chunk(carry, hc_tc_wc):
+            hc, tc, wc = hc_tc_wc
+            hc = constrain_batch(hc, cfg)
+            logits = constrain_batch(self._head(p, hc), cfg, None, "model").astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+            nll = logz - gold
+            if nll.ndim == 3:  # codebook heads: (B, C, K)
+                nll = nll.sum(-1)
+            return carry + jnp.sum(nll * wc[None, :]), None
+
+        B = h_in.shape[0]
+        hs = h_in.reshape(B, n, C, -1).transpose(1, 0, 2, 3)
+        if cfg.n_codebooks:
+            ts = t_in.reshape(B, n, C, cfg.n_codebooks).transpose(1, 0, 2, 3)
+        else:
+            ts = t_in.reshape(B, n, C).transpose(1, 0, 2)
+        ws = w_in.reshape(n, C)
+        total, _ = jax.lax.scan(ce_chunk, jnp.float32(0.0), (hs, ts, ws))
+        denom = B * (S - 1) * max(1, cfg.n_codebooks)
+        loss = total / denom + 0.01 * aux
+        return loss, {"ce": total / denom, "aux": aux}
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return stack_cache_init(self.cfg, batch, max_len, jnp.dtype(self.cfg.dtype))
+
+    def prefill(self, p: Params, batch: dict, cache: Params):
+        h, new_cache, _, _ = self.hidden(p, batch, cache=cache, mode="prefill")
+        logits = self._head(p, h[:, -1:])
+        return new_cache, logits
+
+    def decode_step(self, p: Params, step_in: dict, cache: Params, pos):
+        """step_in: {"tokens": (B,1)} (LM/vlm) or {"frame_embeds": (B,1,d)}."""
+        h, new_cache, _, _ = self.hidden(p, step_in, cache=cache, cache_pos=pos, mode="decode")
+        return self._head(p, h), new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

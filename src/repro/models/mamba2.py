@@ -1,0 +1,165 @@
+"""Mamba2 (SSD) mixer — chunked linear recurrence (train/prefill) and O(1)
+state-step (decode).  Used by the zamba2-7b hybrid backbone.
+
+Faithful to the SSD structure (Dao & Gu 2024): depthwise conv over (x,B,C),
+per-head scalar decay A, state (N x P) per head, chunked scan:
+
+  intra-chunk:  Y  = (L ∘ C Bᵀ) X          (L = exp(segsum(dtA)), causal)
+  chunk state:  S_c = Σ_t exp(cum_end-cum_t) B_t X_tᵀ
+  inter-chunk:  carried state recurrence via lax.scan over chunks
+
+The scan body holds one (l x l) block per head — O(S·l) memory, not O(S²).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+HEAD_P = 64  # SSD head dim
+
+
+def _dims(cfg: ModelConfig):
+    d_in = 2 * cfg.d_model
+    H = d_in // HEAD_P
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N  # conv over (x, B, C), groups G=1
+    return d_in, H, N, conv_ch
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_in, H, N, conv_ch = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, (d, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(k3, (d_in, d), dtype),
+    }
+
+
+def _split(p, cfg, u):
+    """in_proj -> z, xBC (pre-conv), dt."""
+    d_in, H, N, conv_ch = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_ch]
+    dt = jax.nn.softplus(zxbcdt[..., -H:].astype(jnp.float32) + p["dt_bias"])
+    return z, xbc, dt
+
+
+def _conv(p, cfg, xbc, conv_state=None):
+    """Depthwise causal conv width w; returns (out, new_conv_state)."""
+    w = cfg.conv_width
+    if conv_state is None:
+        pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, xbc], axis=1)
+    out = sum(pad[:, i : i + xbc.shape[1]] * p["conv_w"][i][None, None, :] for i in range(w))
+    return jax.nn.silu(out), pad[:, -(w - 1) :]
+
+
+def _segsum(a):
+    """a: (..., l) -> (..., l, l) with out[..., i, j] = sum_{j<t<=i} a_t."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(tri, seg, -jnp.inf)
+
+
+def mamba_apply(
+    p: Params,
+    cfg: ModelConfig,
+    u: jax.Array,                  # (B, S, d)
+    *,
+    cache: Params | None = None,   # {"state": (B,H,N,P), "conv": (B,w-1,ch)}
+    decode: bool = False,
+    chunk: int = 128,
+) -> tuple[jax.Array, Params | None]:
+    d_in, H, N, conv_ch = _dims(cfg)
+    B_, S, _ = u.shape
+    A = -jnp.exp(p["A_log"])  # (H,) negative decay rates
+
+    z, xbc, dt = _split(p, cfg, u)
+
+    if decode:
+        xbc, new_conv = _conv(p, cfg, xbc, cache["conv"])
+        x = xbc[..., :d_in].reshape(B_, S, H, HEAD_P)
+        Bc = xbc[..., d_in : d_in + N]
+        Cc = xbc[..., d_in + N :]
+        # one-step recurrence (S == 1)
+        dtA = (dt[:, 0] * A[None, :]).astype(jnp.float32)            # (B,H)
+        decay = jnp.exp(dtA)[:, :, None, None]
+        inject = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0], Bc[:, 0].astype(jnp.float32), x[:, 0].astype(jnp.float32))
+        state = cache["state"] * decay + inject
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), state)
+        y = y + p["D"][None, :, None] * x[:, 0].astype(jnp.float32)
+        y = y.reshape(B_, 1, d_in).astype(u.dtype)
+        out = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+        return jnp.einsum("bse,ed->bsd", out, p["out_proj"]), {"state": state, "conv": new_conv}
+
+    xbc, conv_tail = _conv(p, cfg, xbc, None if cache is None else None)
+    x = xbc[..., :d_in].reshape(B_, S, H, HEAD_P)
+    Bc = xbc[..., d_in : d_in + N].astype(jnp.float32)
+    Cc = xbc[..., d_in + N :].astype(jnp.float32)
+
+    l = min(chunk, S)
+    if S % l:
+        l = S  # fall back to a single chunk for odd smoke shapes
+    c = S // l
+    xc = x.reshape(B_, c, l, H, HEAD_P).astype(jnp.float32)
+    bc = Bc.reshape(B_, c, l, N)
+    cc = Cc.reshape(B_, c, l, N)
+    dtc = dt.reshape(B_, c, l, H)
+    dtA = dtc * A[None, None, None, :]                               # (B,c,l,H)
+
+    def body(state, inp):
+        xcb, bcb, ccb, dtab, dtb = inp                               # leading axis c mapped
+        cum = jnp.cumsum(dtab, axis=1)                               # (B,l,H)
+        L = jnp.exp(_segsum(dtab.transpose(0, 2, 1)))                # (B,H,l,l)
+        scores = jnp.einsum("bln,bmn->blm", ccb, bcb)[:, None] * L   # (B,H,l,l)
+        y_intra = jnp.einsum("bhlm,bmh,bmhp->blhp", scores, dtb, xcb)
+        decay_out = jnp.exp(cum)                                     # (B,l,H)
+        y_inter = jnp.einsum("bln,blh,bhnp->blhp", ccb, decay_out, state)
+        total = jnp.exp(cum[:, -1])                                  # (B,H)
+        decay_in = jnp.exp(cum[:, -1:, :] - cum)                     # (B,l,H)
+        s_new = jnp.einsum("bln,blh,blh,blhp->bhnp", bcb, decay_in, dtb, xcb)
+        state = state * total[:, :, None, None] + s_new
+        return state, y_intra + y_inter
+
+    state0 = (
+        cache["state"]
+        if cache is not None and decode
+        else jnp.zeros((B_, H, N, HEAD_P), jnp.float32)
+    )
+    inps = (
+        xc.transpose(1, 0, 2, 3, 4),
+        bc.transpose(1, 0, 2, 3),
+        cc.transpose(1, 0, 2, 3),
+        dtA.transpose(1, 0, 2, 3),
+        dtc.transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(body, state0, inps)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, HEAD_P)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, S, d_in).astype(u.dtype)
+    out = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    new_cache = None
+    if cache is not None:  # prefill fills the recurrent cache
+        new_cache = {"state": state, "conv": conv_tail}
+    return jnp.einsum("bse,ed->bsd", out, p["out_proj"]), new_cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d_in, H, N, conv_ch = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, N, HEAD_P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }

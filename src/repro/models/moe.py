@@ -1,0 +1,118 @@
+"""Token-choice top-k MoE with fixed-capacity sort-based dispatch.
+
+Matches the assigned MoE archs (qwen3: 128e top-8, mixtral: 8e top-2).
+Dispatch is the sort/rank/scatter construction (jit-static shapes, exact
+active-expert FLOPs for the roofline, standard "token dropping" beyond
+``capacity_factor``):
+
+  topk -> flatten (T*k assignments) -> stable sort by expert ->
+  within-expert rank via exclusive-cumsum starts -> keep rank < capacity ->
+  scatter tokens into an (E*C, d) buffer -> stacked-expert SwiGLU einsum ->
+  gather back, combine with router weights.
+
+Expert weights are stacked on a leading E axis — the EP axis for sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d, e), jnp.float32),
+        "wg": (jax.random.normal(kg, (e, d, f)) / jnp.sqrt(d)).astype(dtype),
+        "wu": (jax.random.normal(ku, (e, d, f)) / jnp.sqrt(d)).astype(dtype),
+        "wd": (jax.random.normal(kd, (e, f, d)) / jnp.sqrt(f)).astype(dtype),
+    }
+
+
+def _n_shards(cfg: ModelConfig, T: int) -> int:
+    """DP shard count for shard-local dispatch (1 = global path)."""
+    n = cfg.dp_shards
+    return n if n > 1 and T % n == 0 else 1
+
+
+def moe_apply(p: Params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Load-balancing aux loss per Switch.
+
+    Routing/sort/dispatch are SHARD-LOCAL (leading shard dim + axis=-1
+    argsort), so no token crosses chips until the expert all-to-all.
+    Without this, pjit replicates the global (T*K, d) dispatch gather on
+    every chip (measured: 6.5 TB/chip/step on qwen3-moe train_4k)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = _n_shards(cfg, T)
+    Tl = T // G
+    xt = x.reshape(G, Tl, d)
+    if cfg.mesh_axes and G > 1:
+        from jax.sharding import PartitionSpec as P
+
+        xt = jax.lax.with_sharding_constraint(xt, P(cfg.mesh_axes, None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, eid = jax.lax.top_k(probs, K)                       # (G, Tl, K)
+    w = (w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # load-balance aux loss (Switch): E * sum_e fraction_e * prob_e
+    frac = jnp.mean(jax.nn.one_hot(eid[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    # shard-local per-expert capacity; tiny workloads (decode steps, smoke
+    # tests) get full no-drop capacity so serving is exact
+    if T * K <= 8192:
+        C = Tl * K
+    else:
+        C = int(Tl * K // E * cfg.capacity_factor) + 1
+    N = Tl * K
+    flat_e = eid.reshape(G, N)
+    flat_t = jnp.broadcast_to(
+        (jnp.arange(N, dtype=jnp.int32) // K)[None, :], (G, N)
+    )
+    flat_w = w.reshape(G, N)
+
+    # shard-local sort; dispatch and combine are entirely gather-based
+    # (XLA scatter lowerings materialise O(output) u32 index tensors —
+    # measured 22 TB/step — gathers cost only what they read)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    inv = jnp.argsort(order, axis=-1, stable=True)         # unsort permutation
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    seg = (se + jnp.arange(G, dtype=se.dtype)[:, None] * E).reshape(-1)
+    counts = jax.ops.segment_sum(jnp.ones_like(seg), seg, num_segments=G * E).reshape(G, E)
+    starts = jnp.concatenate(
+        [jnp.zeros((G, 1), counts.dtype), jnp.cumsum(counts, axis=-1)[:, :-1]], axis=-1
+    )
+    rank = jnp.arange(N, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        starts, se.astype(jnp.int32), axis=-1
+    ).astype(jnp.int32)
+    keep = rank < C                                        # (G, N) token kept
+
+    # dispatch: buf[g, e, c] = sorted row at starts[e]+c (valid if c<counts)
+    src = starts[:, :, None].astype(jnp.int32) + jnp.arange(C, dtype=jnp.int32)[None, None, :]
+    valid = jnp.arange(C, dtype=jnp.int32)[None, None, :] < counts[:, :, None].astype(jnp.int32)
+    src = jnp.clip(src, 0, N - 1).reshape(G, E * C)
+    tok_of_slot = jnp.take_along_axis(st, src, axis=-1)    # (G, E*C)
+    h = jnp.take_along_axis(xt, tok_of_slot[..., None], axis=1)  # (G, E*C, d)
+    h = (h * valid.reshape(G, E * C, 1).astype(x.dtype)).reshape(G, E, C, d)
+
+    act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", h, p["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", h, p["wu"]
+    )
+    y = jnp.einsum("gecf,efd->gecd", act, p["wd"]).reshape(G, E * C, d)
+
+    # combine: sorted row n lives at slot se*C+rank (if kept) -> unsort ->
+    # (Tl, K) rows per token -> weighted sum.  Pure gathers + reshape-sum.
+    slot = jnp.clip(se.astype(jnp.int32) * C + rank, 0, E * C - 1)
+    y_sorted = jnp.take_along_axis(y, slot[..., None], axis=1)
+    y_sorted = y_sorted * keep[..., None].astype(y.dtype)
+    y_tok = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)  # token-major
+    out = (y_tok * flat_w[..., None]).reshape(G, Tl, K, d).sum(axis=2)
+    return out.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,251 @@
+"""Pattern-aware layer stack: stacked-scan over repeating periods.
+
+Layers are grouped into the config's repeating ``pattern`` (e.g. gemma3's
+5 local + 1 global).  Parameters for full repetitions are stacked with a
+leading ``n_periods`` axis and iterated with ``jax.lax.scan`` (one HLO body
+regardless of depth — llama3-405b's 126 layers compile as 21 periods of a
+6-layer body... pattern (attn,) => 126 iterations of one layer); leftover
+layers are unrolled.  KV/state caches mirror the same structure.  zamba2's
+``shared_attn`` slots share one weight set (closed over, not stacked) while
+each invocation keeps its own cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2, moe as moe_mod, xlstm
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (
+    Params,
+    attention_apply,
+    attn_init,
+    constrain_batch,
+    dense_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ModelConfig, spec: LayerSpec, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.mixer == "attn" or spec.mixer == "local":
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba2.mamba_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg, dtype)
+    elif spec.mixer == "shared_attn":
+        pass  # weights live in params["shared"]
+    if spec.ffn == "mlp":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif spec.ffn == "moe":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    return p
+
+
+def shared_block_init(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def layer_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, dtype):
+    hd = cfg.head_dim_
+    if spec.mixer in ("attn", "shared_attn"):
+        shape = (batch, max_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == "local":
+        shape = (batch, min(max_len, cfg.window), cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if spec.mixer == "mamba":
+        return mamba2.mamba_cache_init(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm.mlstm_cache_init(cfg, batch)
+    if spec.mixer == "slstm":
+        return xlstm.slstm_cache_init(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def layer_apply(
+    p: Params,
+    shared: Params | None,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    prefix_len: int = 0,
+    cache=None,
+    cache_pos=None,
+    mode: str = "train",
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    decode = mode == "decode"
+    if spec.mixer == "shared_attn":
+        h = rmsnorm(shared["norm1"], x, cfg.norm_eps)
+        attn_out, new_cache = attention_apply(
+            shared["attn"], cfg, h, positions,
+            cache=cache, cache_pos=cache_pos, prefix_len=prefix_len,
+        )
+        x = x + attn_out
+        h = rmsnorm(shared["norm2"], x, cfg.norm_eps)
+        x = x + mlp_apply(shared["mlp"], h)
+        return x, new_cache, aux
+
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer in ("attn", "local"):
+        window = cfg.window if spec.mixer == "local" else 0
+        out, new_cache = attention_apply(
+            p["attn"], cfg, h, positions,
+            window=window, prefix_len=prefix_len, cache=cache, cache_pos=cache_pos,
+        )
+    elif spec.mixer == "mamba":
+        out, new_cache = mamba2.mamba_apply(p["mamba"], cfg, h, cache=cache, decode=decode)
+    elif spec.mixer == "mlstm":
+        out, new_cache = xlstm.mlstm_apply(p["mlstm"], cfg, h, cache=cache, decode=decode)
+    elif spec.mixer == "slstm":
+        out, new_cache = xlstm.slstm_apply(p["slstm"], cfg, h, cache=cache, decode=decode)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + out
+
+    if spec.ffn == "mlp":
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+    elif spec.ffn == "moe":
+        out, aux = moe_mod.moe_apply(p["moe"], cfg, rmsnorm(p["norm2"], x, cfg.norm_eps))
+        x = x + out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full stack
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ModelConfig, dtype) -> Params:
+    n_slots = len(cfg.pattern)
+    keys = jax.random.split(key, cfg.n_periods * n_slots + n_slots + 1)
+    p: Params = {}
+    if any(s.mixer == "shared_attn" for s in cfg.pattern):
+        p["shared"] = shared_block_init(keys[-1], cfg, dtype)
+    if cfg.n_periods:
+        periods = {}
+        for si, spec in enumerate(cfg.pattern):
+            per = [
+                layer_init(keys[pi * n_slots + si], cfg, spec, dtype)
+                for pi in range(cfg.n_periods)
+            ]
+            periods[f"slot{si}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        p["periods"] = periods
+    p["tail"] = [
+        layer_init(keys[cfg.n_periods * n_slots + i], cfg, spec, dtype)
+        for i, spec in enumerate(cfg.tail_layers)
+    ]
+    return p
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    c: Params = {}
+    if cfg.n_periods:
+        c["periods"] = {
+            f"slot{si}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods, *x.shape)).copy()
+                if hasattr(x, "shape") else x,
+                layer_cache_init(cfg, spec, batch, max_len, dtype),
+            )
+            for si, spec in enumerate(cfg.pattern)
+        }
+    c["tail"] = [
+        layer_cache_init(cfg, spec, batch, max_len, dtype) for spec in cfg.tail_layers
+    ]
+    return c
+
+
+def stack_apply(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    prefix_len: int = 0,
+    cache: Params | None = None,
+    cache_pos=None,
+    mode: str = "train",
+):
+    """Returns (x, new_cache, aux_sum)."""
+    shared = p.get("shared")
+    has_cache = cache is not None
+
+    def run_period(x_aux, period_params, period_cache):
+        x, aux = x_aux
+        x = constrain_batch(x, cfg)
+        new_caches = {}
+        for si, spec in enumerate(cfg.pattern):
+            lp = period_params[f"slot{si}"]
+            lc = period_cache[f"slot{si}"] if has_cache else None
+            x, nc, a = layer_apply(
+                lp, shared, cfg, spec, x, positions,
+                prefix_len=prefix_len, cache=lc, cache_pos=cache_pos, mode=mode,
+            )
+            if has_cache:
+                new_caches[f"slot{si}"] = nc
+            aux = aux + a
+        return (x, aux), new_caches
+
+    aux = jnp.float32(0.0)
+    new_cache: Params = {}
+    if cfg.n_periods:
+        def body(carry, xs):
+            period_params, period_cache = xs
+            return run_period(carry, period_params, period_cache)
+
+        if cfg.remat == "period" and mode == "train":
+            body = jax.checkpoint(body)
+        elif cfg.remat == "dots" and mode == "train":
+            # save matmul outputs: no recompute of the big einsums (and no
+            # FSDP weight re-gather) in backward, at higher live memory
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        xs = (p["periods"], cache["periods"] if has_cache else _dummy_like(p["periods"], cfg))
+        (x, aux), period_caches = jax.lax.scan(
+            body, (x, aux), xs, unroll=cfg.scan_unroll
+        )
+        if has_cache:
+            new_cache["periods"] = period_caches
+    if has_cache:
+        new_cache["tail"] = []
+    for i, spec in enumerate(cfg.tail_layers):
+        lc = cache["tail"][i] if has_cache else None
+        x, nc, a = layer_apply(
+            p["tail"][i], shared, cfg, spec, x, positions,
+            prefix_len=prefix_len, cache=lc, cache_pos=cache_pos, mode=mode,
+        )
+        aux = aux + a
+        if has_cache:
+            new_cache["tail"].append(nc)
+    return x, (new_cache if has_cache else None), aux
+
+
+def _dummy_like(periods: Params, cfg: ModelConfig):
+    """Zero-length placeholder so scan xs structure matches without cache."""
+    return {f"slot{si}": jnp.zeros((cfg.n_periods,), jnp.int32) for si in range(len(cfg.pattern))}

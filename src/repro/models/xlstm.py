@@ -1,0 +1,192 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential scan) — the 7:1 pattern of xlstm-1.3b.
+
+mLSTM (simplified, stabilizer-free — gates are sigmoid-bounded so the
+chunked form stays finite in fp32):
+  C_t = f_t C_{t-1} + i_t v_t k_tᵀ      (C: dk x dv matrix memory per head)
+  n_t = f_t n_{t-1} + i_t k_t
+  h_t = (C_tᵀ q_t) / max(|n_tᵀ q_t|, 1)
+
+Chunked like SSD: intra-chunk decay matrix from cumulative log f, carried
+(C, n) state across chunks with lax.scan.  Decode is the O(1) recurrence.
+
+sLSTM: per-head scalar cell with recurrent block-diagonal R — inherently
+sequential, computed with lax.scan over time (compiles to one HLO while
+loop; only 1/8 of layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_in = 2 * d
+    kq, kk, kv, kg, ko, kp = jax.random.split(key, 6)
+    return {
+        "up": dense_init(kq, (d, 2 * d_in), dtype),         # -> (x, z gate)
+        "wq": dense_init(kk, (d_in, d_in), dtype),
+        "wk": dense_init(kv, (d_in, d_in), dtype),
+        "wv": dense_init(kg, (d_in, d_in), dtype),
+        "wif": dense_init(ko, (d_in, 2 * cfg.n_heads), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "down": dense_init(kp, (d_in, d), dtype),
+    }
+
+
+def _mlstm_qkv(p, cfg, u):
+    d_in = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = d_in // H
+    up = jnp.einsum("bsd,de->bse", u, p["up"])
+    x, z = up[..., :d_in], up[..., d_in:]
+    q = jnp.einsum("bse,ef->bsf", x, p["wq"]).reshape(*x.shape[:2], H, hd)
+    k = jnp.einsum("bse,ef->bsf", x, p["wk"]).reshape(*x.shape[:2], H, hd) / jnp.sqrt(hd)
+    v = jnp.einsum("bse,ef->bsf", x, p["wv"]).reshape(*x.shape[:2], H, hd)
+    gates = jnp.einsum("bse,eg->bsg", x.astype(jnp.float32), p["wif"])
+    i_g = jax.nn.sigmoid(gates[..., :H])                     # (B,S,H)
+    logf = jax.nn.log_sigmoid(gates[..., H:])                # (B,S,H)
+    return x, z, q, k, v, i_g, logf
+
+
+def mlstm_apply(
+    p: Params, cfg: ModelConfig, u: jax.Array, *,
+    cache: Params | None = None, decode: bool = False, chunk: int = 128,
+) -> tuple[jax.Array, Params | None]:
+    B, S, d = u.shape
+    d_in, H = 2 * d, cfg.n_heads
+    hd = d_in // H
+    x, z, q, k, v, i_g, logf = _mlstm_qkv(p, cfg, u)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+
+    if decode:  # S == 1; q/k/v[:, 0] are already (B, H, hd)
+        f = jnp.exp(logf[:, 0])[:, :, None, None]            # (B,H,1,1)
+        C = cache["C"] * f + i_g[:, 0][:, :, None, None] * jnp.einsum(
+            "bhk,bhv->bhkv", kf[:, 0], vf[:, 0]
+        )
+        n = cache["n"] * f[..., 0] + i_g[:, 0][:, :, None] * kf[:, 0]
+        qh = qf[:, 0]
+        num = jnp.einsum("bhkv,bhk->bhv", C, qh)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qh)), 1.0)
+        h = (num / den[:, :, None]).reshape(B, 1, d_in).astype(u.dtype)
+        out = rmsnorm(p["norm"], h * jax.nn.silu(z), cfg.norm_eps)
+        return jnp.einsum("bse,ed->bsd", out, p["down"]), {"C": C, "n": n}
+
+    l = min(chunk, S)
+    if S % l:
+        l = S
+    c = S // l
+    qc = qf.reshape(B, c, l, H, hd)
+    kc = kf.reshape(B, c, l, H, hd)
+    vc = vf.reshape(B, c, l, H, hd)
+    ic = i_g.reshape(B, c, l, H)
+    lfc = logf.reshape(B, c, l, H)
+
+    def body(carry, inp):
+        C, n = carry
+        qb, kb, vb, ib, lfb = inp
+        cum = jnp.cumsum(lfb, axis=1)                         # (B,l,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]         # (B,l,l,H) decay j->i
+        tri = jnp.tril(jnp.ones((l, l), bool))[None, :, :, None]
+        # cum_i - cum_j = sum_{j<s<=i} log f_s: injection at j decays from
+        # j+1 onward (inclusive cumsums cancel j's own gate), scaled by i_j
+        decay = jnp.where(tri, jnp.exp(seg), 0.0) * ib[:, None, :, :]
+        scores = jnp.einsum("blhk,bmhk->blmh", qb, kb) * decay
+        num_intra = jnp.einsum("blmh,bmhv->blhv", scores, vb)
+        den_intra = jnp.einsum("blmh,bmhk,blhk->blh", decay, kb, qb)
+        dec_out = jnp.exp(cum)                                # (B,l,H)
+        num_inter = jnp.einsum("blhk,bhkv,blh->blhv", qb, C, dec_out)
+        den_inter = jnp.einsum("blhk,bhk,blh->blh", qb, n, dec_out)
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+        h = num / den[..., None]
+        total = jnp.exp(cum[:, -1])                           # (B,H)
+        dec_in = jnp.exp(cum[:, -1:, :] - cum) * ib           # (B,l,H)
+        C = C * total[:, :, None, None] + jnp.einsum("blhk,blhv,blh->bhkv", kb, vb, dec_in)
+        n = n * total[:, :, None] + jnp.einsum("blhk,blh->bhk", kb, dec_in)
+        return (C, n), h
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    inps = tuple(t.transpose(1, 0, 2, 3, 4) if t.ndim == 5 else t.transpose(1, 0, 2, 3) for t in (qc, kc, vc, ic, lfc))
+    (C, n), hs = jax.lax.scan(body, (C0, n0), inps)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in).astype(u.dtype)
+    out = rmsnorm(p["norm"], h * jax.nn.silu(z), cfg.norm_eps)
+    new_cache = {"C": C, "n": n} if cache is not None else None
+    return jnp.einsum("bse,ed->bsd", out, p["down"]), new_cache
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int) -> Params:
+    d_in, H = 2 * cfg.d_model, cfg.n_heads
+    hd = d_in // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32), "n": jnp.zeros((batch, H, hd), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    kw, kr, kf = jax.random.split(key, 3)
+    ff = int(d * 4 / 3) // 128 * 128 or d
+    k1, k2 = jax.random.split(kf)
+    return {
+        "w": dense_init(kw, (d, 4 * d), jnp.float32),        # i,f,z,o pre-acts
+        "r": (jax.random.normal(kr, (H, hd, 4 * hd)) / jnp.sqrt(hd)).astype(jnp.float32),
+        "norm": rmsnorm_init(d, dtype),
+        "up": dense_init(k1, (d, ff), dtype),
+        "down": dense_init(k2, (ff, d), dtype),
+    }
+
+
+def slstm_apply(
+    p: Params, cfg: ModelConfig, u: jax.Array, *,
+    cache: Params | None = None, decode: bool = False,
+) -> tuple[jax.Array, Params | None]:
+    B, S, d = u.shape
+    H = cfg.n_heads
+    hd = d // H
+    wx = jnp.einsum("bsd,de->bse", u.astype(jnp.float32), p["w"]).reshape(B, S, H, 4 * hd)
+
+    def cell(carry, wxt):
+        h, c, n = carry                                       # (B,H,hd) each
+        rec = jnp.einsum("bhk,hkg->bhg", h, p["r"])
+        g = wxt + rec
+        i_g = jnp.exp(jnp.minimum(g[..., :hd], 0.0))
+        f_g = jax.nn.sigmoid(g[..., hd : 2 * hd])
+        z_g = jnp.tanh(g[..., 2 * hd : 3 * hd])
+        o_g = jax.nn.sigmoid(g[..., 3 * hd :])
+        c = f_g * c + i_g * z_g
+        n = f_g * n + i_g
+        h = o_g * c / jnp.maximum(n, 1.0)
+        return (h, c, n), h
+
+    if cache is not None and decode:
+        carry0 = (cache["h"], cache["c"], cache["n"])
+    else:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        carry0 = (zeros, zeros, zeros)
+    (h, c, n), hs = jax.lax.scan(cell, carry0, wx.transpose(1, 0, 2, 3))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(u.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, p["up"])), p["down"])
+    new_cache = {"h": h, "c": c, "n": n} if cache is not None else None
+    return y, new_cache
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int) -> Params:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z}

@@ -1,0 +1,80 @@
+"""Batched serving engine: admit requests, prefill, interleave decode.
+
+A deliberately small but real scheduler: fixed decode batch slots, each
+slot holding one sequence; new requests prefill into a free slot; every
+engine tick decodes one token for all active slots (continuous batching).
+The KV cache is the model's stacked cache tree — raw mode by default,
+GBDI-FR compressed pages via ``serving.kv_cache`` for attention archs
+(the §Perf serving variant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, batch_slots: int = 4, max_len: int = 256):
+        self.model, self.params = model, params
+        self.B, self.max_len = batch_slots, max_len
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.pos = 0
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    def admit(self, reqs: list[Request]) -> int:
+        """Prefill a batch of requests into free slots (same length prompts
+        share one prefill; production would bucket by length)."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None or r.done]
+        take = reqs[: len(free)]
+        if not take:
+            return 0
+        S = max(len(r.prompt) for r in take)
+        toks = np.zeros((self.B, S), np.int32)
+        for slot, r in zip(free, take):
+            toks[slot, S - len(r.prompt):] = r.prompt
+            self.slot_req[slot] = r
+        self.cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)}, self.cache)
+        self.pos = S
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for slot, r in zip(free, take):
+            r.out.append(int(nxt[slot]))
+        return len(take)
+
+    def tick(self) -> bool:
+        """Decode one token for every active slot. Returns any-active."""
+        active = [r for r in self.slot_req if r is not None and not r.done]
+        if not active or self.pos >= self.max_len - 1:
+            return False
+        last = np.zeros((self.B, 1), np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None and not r.done and r.out:
+                last[i, 0] = r.out[-1]
+        logits, self.cache = self._decode(
+            self.params, {"tokens": jnp.asarray(last)}, self.cache, jnp.int32(self.pos)
+        )
+        self.pos += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, r in enumerate(self.slot_req):
+            if r is None or r.done:
+                continue
+            r.out.append(int(nxt[i]))
+            if len(r.out) >= r.max_new:
+                r.done = True
+        return any(r is not None and not r.done for r in self.slot_req)

@@ -1,0 +1,166 @@
+"""Paged KV cache with GBDI-FR compressed pages.
+
+The decode-time memory wall is KV-cache HBM traffic: every generated token
+re-reads the whole cache.  GBDI-FR pages cut those bytes by the fixed rate
+(~1.33x for bf16 at 12 bits/word before table overhead) — the paper's
+bandwidth story applied to serving.
+
+Layout per attention layer (structure-of-arrays, all static shapes):
+
+  pages:   ptrs (B, n_pages, ptr_lanes)  deltas (B, n_pages, delta_lanes)
+           out_vals/out_idx (B, n_pages, cap)  n_out (B, n_pages)
+  tail:    k/v raw ring (B, page_tokens, Kv, hd) — most recent tokens
+  scalars: handled by the caller (decode position)
+
+A page holds ``page_tokens = page_words // (Kv*hd)`` consecutive tokens'
+K (or V) values.  Appends go to the raw tail; when the tail fills, it is
+compressed into the next page slot (branchless ``lax.cond``).  Reads
+decompress pages on the fly — or never leave VMEM at all in the fused
+Pallas kernel (:mod:`repro.kernels.gbdi_paged_attn`).
+
+Keys/values cache *with RoPE already applied* (like the raw cache), so
+page contents are position-final and compress-once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
+
+KV_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14, delta_bits=8, outlier_cap=64)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    n_kv: int
+    head_dim: int
+    max_len: int
+    fr: FRConfig = KV_FR
+
+    @property
+    def row_words(self) -> int:
+        return self.n_kv * self.head_dim
+
+    @property
+    def page_tokens(self) -> int:
+        assert self.fr.page_words % self.row_words == 0 or self.row_words % self.fr.page_words == 0
+        return max(1, self.fr.page_words // self.row_words)
+
+    @property
+    def n_pages(self) -> int:
+        return math.ceil(self.max_len / self.page_tokens)
+
+    def compressed_bytes(self, batch: int) -> int:
+        per_page = self.fr.compressed_bytes_per_page()
+        pages = 2 * batch * self.n_pages * per_page  # k and v
+        tail = 2 * batch * self.page_tokens * self.row_words * 2
+        return pages + tail
+
+    def raw_bytes(self, batch: int) -> int:
+        return 2 * batch * self.max_len * self.row_words * 2
+
+
+def init_compressed(spec: KVSpec, batch: int, bases: jax.Array) -> dict:
+    fr = spec.fr
+    pages_per_row = max(1, spec.row_words // fr.page_words)
+    n_slots = spec.n_pages * pages_per_row
+
+    def page_zeros():
+        return {
+            "ptrs": jnp.zeros((batch, n_slots, fr.ptr_lanes), jnp.int32),
+            "deltas": jnp.zeros((batch, n_slots, fr.delta_lanes), jnp.int32),
+            "out_vals": jnp.zeros((batch, n_slots, fr.outlier_cap), jnp.int32),
+            "out_idx": jnp.zeros((batch, n_slots, fr.outlier_cap), jnp.int32),
+            "n_out": jnp.zeros((batch, n_slots), jnp.int32),
+        }
+
+    tail = jnp.zeros((batch, spec.page_tokens, spec.n_kv, spec.head_dim), jnp.bfloat16)
+    return {"k_pages": page_zeros(), "v_pages": page_zeros(),
+            "k_tail": tail, "v_tail": tail, "bases": bases}
+
+
+def _to_words(x16: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x16.astype(jnp.bfloat16), jnp.uint16).astype(jnp.int32)
+
+
+def _from_words(w: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(w.astype(jnp.uint16), jnp.bfloat16)
+
+
+def _compress_rows(spec: KVSpec, rows: jax.Array, bases: jax.Array) -> dict:
+    """rows: (B, page_tokens, Kv, hd) -> per-batch page blobs (B, ppr, ...)."""
+    B = rows.shape[0]
+    words = _to_words(rows).reshape(B, -1, spec.fr.page_words)
+    blob = jax.vmap(lambda w: fr_encode(w, bases, spec.fr))(words)
+    blob.pop("n_dropped", None)
+    return blob
+
+
+def _decompress_all(spec: KVSpec, pages: dict, bases: jax.Array) -> jax.Array:
+    """-> (B, n_pages*page_tokens, Kv, hd) bf16."""
+    B = pages["ptrs"].shape[0]
+    words = jax.vmap(lambda b: fr_decode(b, bases, spec.fr))(pages)
+    return _from_words(words.reshape(B, -1, spec.n_kv, spec.head_dim))
+
+
+def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array) -> dict:
+    """Append one token (B, 1, Kv, hd) at absolute position ``pos``."""
+    pt = spec.page_tokens
+    slot = pos % pt
+    k_tail = jax.lax.dynamic_update_slice(cache["k_tail"], k.astype(jnp.bfloat16), (0, slot, 0, 0))
+    v_tail = jax.lax.dynamic_update_slice(cache["v_tail"], v.astype(jnp.bfloat16), (0, slot, 0, 0))
+    page_id = pos // pt
+    pages_per_row = max(1, spec.row_words * pt // spec.fr.page_words)
+
+    def flush(c):
+        kb = _compress_rows(spec, k_tail, cache["bases"])
+        vb = _compress_rows(spec, v_tail, cache["bases"])
+        def put(dst, src):
+            return jax.tree_util.tree_map(
+                lambda d, s: jax.lax.dynamic_update_slice(
+                    d, s.astype(d.dtype),
+                    (0, page_id * pages_per_row) + (0,) * (d.ndim - 2),
+                ),
+                dst, src,
+            )
+        return {**c, "k_pages": put(c["k_pages"], kb), "v_pages": put(c["v_pages"], vb),
+                "k_tail": k_tail, "v_tail": v_tail}
+
+    def nop(c):
+        return {**c, "k_tail": k_tail, "v_tail": v_tail}
+
+    return jax.lax.cond(slot == pt - 1, flush, nop, cache)
+
+
+def read_full(spec: KVSpec, cache: dict, pos: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (K, V, valid) covering [0, pos]: decompressed pages with the raw
+    tail overlaid for the current (unflushed) page."""
+    K = _decompress_all(spec, cache["k_pages"], cache["bases"])
+    V = _decompress_all(spec, cache["v_pages"], cache["bases"])
+    pt = spec.page_tokens
+    page_id = pos // pt
+    K = jax.lax.dynamic_update_slice(
+        K, cache["k_tail"], (0, page_id * pt, 0, 0))
+    V = jax.lax.dynamic_update_slice(
+        V, cache["v_tail"], (0, page_id * pt, 0, 0))
+    S = K.shape[1]
+    valid = jnp.arange(S) <= pos
+    return K, V, valid
+
+
+def attention_decode(spec: KVSpec, q: jax.Array, cache: dict, pos: jax.Array) -> jax.Array:
+    """q: (B, 1, H, hd) -> (B, 1, H*hd); oracle path (explicit decompress)."""
+    K, V, valid = read_full(spec, cache, pos)
+    B, S, Kv, hd = K.shape
+    H = q.shape[2]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = q.reshape(B, 1, Kv, H // Kv, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, K).astype(jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(V.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, V)
+    return out.reshape(B, 1, H * hd)

@@ -1,0 +1,67 @@
+"""The jitted train step: loss -> grads -> clipped AdamW update.
+
+Supports grad-accumulation microbatching (scan over micro-slices of the
+global batch) — a memory knob for the §Perf loop.  With ``compress_grads``
+the cross-pod gradient reduction goes through the GBDI-FR compressed
+exchange in :mod:`repro.distributed.collectives` instead of plain psum
+(the paper's bandwidth story applied to the slow inter-pod links).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import adamw
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    n_micro: int = 1,
+    compress_grads: bool = False,
+    fr_bases=None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        # microbatch over the leading batch dim
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        sliced = jax.tree.map(
+            lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]), batch
+        )
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), sliced)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        return loss_sum / n_micro, {}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if compress_grads:
+            from repro.distributed import collectives
+
+            grads = collectives.compressed_crosspod_mean(grads, fr_bases)
+        new_params, new_state, opt_metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        return new_params, new_state, {"loss": loss, **opt_metrics}
+
+    return train_step

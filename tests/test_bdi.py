@@ -1,0 +1,57 @@
+"""B∆I baseline: roundtrip + known-vector sizes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bdi
+
+
+def _roundtrip(data: np.ndarray):
+    blob = bdi.compress(data)
+    rec = bdi.decompress(blob)
+    raw = data.view(np.uint8).reshape(-1)
+    np.testing.assert_array_equal(rec[: raw.size], raw)
+    return blob
+
+
+def test_zero_blocks():
+    blob = _roundtrip(np.zeros(256, np.uint32))
+    assert (blob["tags"] == 1).all()
+    assert bdi.compression_ratio(blob) > 50
+
+
+def test_repeated_blocks():
+    blob = _roundtrip(np.full(256, 0xDEADBEEF, np.uint32))
+    assert (blob["tags"] == 2).all()
+
+
+def test_narrow_deltas_compress():
+    rng = np.random.default_rng(0)
+    base = np.uint32(0x40000000)
+    data = (base + rng.integers(0, 100, 4096)).astype(np.uint32)
+    blob = _roundtrip(data)
+    assert bdi.compression_ratio(blob) > 2.0
+
+
+def test_random_does_not_compress():
+    rng = np.random.default_rng(0)
+    blob = _roundtrip(rng.integers(0, 2**64, 1024, dtype=np.uint64).view(np.uint32))
+    assert 0.9 < bdi.compression_ratio(blob) <= 1.0  # tag overhead only
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["uniform", "clustered", "zeros", "floats", "rep"]))
+def test_bdi_roundtrip_property(seed, style):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 2000))
+    if style == "uniform":
+        data = rng.integers(0, 2**32, n, dtype=np.uint32)
+    elif style == "clustered":
+        data = (np.uint32(0xABCD0000) + rng.integers(0, 64, n)).astype(np.uint32)
+    elif style == "zeros":
+        data = np.where(rng.random(n) < 0.7, 0, rng.integers(0, 2**32, n)).astype(np.uint32)
+    elif style == "rep":
+        data = np.tile(rng.integers(0, 2**32, 2, dtype=np.uint32), n // 2 + 1)[:n]
+    else:
+        data = rng.normal(0, 5, n).astype(np.float32).view(np.uint32)
+    _roundtrip(data)

@@ -1,0 +1,98 @@
+"""Pallas GBDI-FR kernels vs the pure-jnp oracle: bit-exact across sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gbdi_fr import (
+    FRConfig, fr_decode, fr_encode, fit_fr_bases, tensor_to_pages, pages_to_tensor,
+)
+from repro.kernels import ops
+
+CFGS = [
+    FRConfig(),                                                   # bf16 default
+    FRConfig(word_bits=16, page_words=1024, delta_bits=4, outlier_cap=32),
+    FRConfig(word_bits=32, page_words=1024, delta_bits=16, outlier_cap=64),
+    FRConfig(word_bits=32, page_words=2048, delta_bits=8, num_bases=14, outlier_cap=128),
+]
+
+
+def _pages(rng, cfg, n_pages, style):
+    mask = (1 << cfg.word_bits) - 1
+    if style == "gauss":
+        x = rng.normal(0, 1, (n_pages, cfg.page_words)).astype(np.float32)
+        w = x.view(np.uint32) >> (16 if cfg.word_bits == 16 else 0)
+    elif style == "clustered":
+        centers = rng.integers(0, mask, 6)
+        w = (centers[rng.integers(0, 6, (n_pages, cfg.page_words))]
+             + rng.integers(-60, 60, (n_pages, cfg.page_words)))
+    elif style == "zeros":
+        w = np.where(rng.random((n_pages, cfg.page_words)) < 0.6, 0,
+                     rng.integers(0, mask, (n_pages, cfg.page_words)))
+    else:  # uniform: worst case, all outliers
+        w = rng.integers(0, mask, (n_pages, cfg.page_words))
+    return jnp.asarray((w & mask).astype(np.int64), dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"wb{c.word_bits}_p{c.page_words}_d{c.delta_bits}_c{c.outlier_cap}")
+@pytest.mark.parametrize("style", ["gauss", "clustered", "zeros", "uniform"])
+def test_kernel_matches_ref(cfg, style):
+    rng = np.random.default_rng(hash((cfg.word_bits, cfg.page_words, style)) % 2**31)
+    x = _pages(rng, cfg, 8, style)
+    bases = fit_fr_bases(x, cfg)
+    ref_blob = fr_encode(x, bases, cfg)
+    ker_blob = ops.encode_pages(x, bases, cfg, backend="kernel")
+    for k in ref_blob:
+        np.testing.assert_array_equal(np.asarray(ker_blob[k]), np.asarray(ref_blob[k]), err_msg=k)
+    ref_dec = fr_decode(ref_blob, bases, cfg)
+    ker_dec = ops.decode_pages(ker_blob, bases, cfg, backend="kernel")
+    np.testing.assert_array_equal(np.asarray(ker_dec), np.asarray(ref_dec))
+
+
+def test_fr_lossless_within_capacity():
+    """Pages with <= outlier_cap outliers roundtrip bit-exactly."""
+    rng = np.random.default_rng(5)
+    cfg = FRConfig()
+    centers = rng.integers(0, 2**16 - 1, cfg.num_bases)
+    w = centers[rng.integers(0, cfg.num_bases, (4, cfg.page_words))] + rng.integers(-100, 100, (4, cfg.page_words))
+    # inject exactly outlier_cap far values per page
+    w[:, : cfg.outlier_cap] = rng.integers(0, 2**16 - 1, (4, cfg.outlier_cap))
+    x = jnp.asarray((w & 0xFFFF).astype(np.int64), dtype=jnp.int32)
+    bases = jnp.asarray((centers & 0xFFFF).astype(np.int64) - (1 << 15), dtype=jnp.int32) + (1 << 15)
+    blob = fr_encode(x, bases, cfg)
+    assert int(blob["n_dropped"].sum()) == 0
+    dec = fr_decode(blob, bases, cfg)
+    # compare mod 2^16 (decode canonicalises to [0, 65535])
+    np.testing.assert_array_equal(np.asarray(dec) & 0xFFFF, np.asarray(x) & 0xFFFF)
+
+
+def test_tensor_roundtrip_bf16():
+    rng = np.random.default_rng(11)
+    cfg = FRConfig()
+    x = jnp.asarray(rng.normal(0, 0.3, (3, 5, 257)).astype(np.float32)).astype(jnp.bfloat16)
+    pages, meta = tensor_to_pages(x, cfg)
+    bases = fit_fr_bases(pages, cfg)
+    blob, meta2 = ops.encode_tensor(x, bases, cfg, backend="kernel")
+    meta.update(meta2)
+    y = ops.decode_tensor(blob, meta, bases, cfg, backend="kernel")
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # near-lossless: dropped-outlier fraction is the only error source
+    frac = float(jnp.mean((y == x).astype(jnp.float32)))
+    assert frac > 0.9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_kernel_property_random(seed):
+    rng = np.random.default_rng(seed)
+    cfg = FRConfig(word_bits=16, page_words=256, delta_bits=8, outlier_cap=16)
+    x = _pages(rng, cfg, 4, rng.choice(["gauss", "clustered", "zeros", "uniform"]))
+    bases = fit_fr_bases(x, cfg)
+    rb = fr_encode(x, bases, cfg)
+    kb = ops.encode_pages(x, bases, cfg, backend="kernel")
+    for k in rb:
+        np.testing.assert_array_equal(np.asarray(kb[k]), np.asarray(rb[k]), err_msg=k)
+    np.testing.assert_array_equal(
+        np.asarray(ops.decode_pages(kb, bases, cfg, backend="kernel")),
+        np.asarray(fr_decode(rb, bases, cfg)),
+    )

@@ -1,0 +1,68 @@
+"""Modified k-means: convergence, coverage, modified >= vanilla (paper claim)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import gbdi
+from repro.core.kmeans import fit_bases, fit_bases_host
+
+
+def _cr(data, model):
+    return gbdi.compression_ratio(gbdi.encode(data, model))
+
+
+def test_bases_cover_clusters():
+    rng = np.random.default_rng(0)
+    centers = np.array([1000, 50_000, 1_000_000, -2_000_000], dtype=np.int64)
+    data = (centers[rng.integers(0, 4, 30_000)] + rng.integers(-7, 8, 30_000)).astype(np.int64)
+    bases, widths = fit_bases(
+        jnp.asarray(data, jnp.int32), num_bases=6, width_set=(4, 8, 16), word_bits=32, iters=15,
+    )
+    bases = np.asarray(bases)
+    for c in centers:
+        assert np.abs(bases - c).min() < 16, (c, bases)
+    assert set(np.asarray(widths)).issubset({4, 8, 16})
+
+
+def test_modified_beats_vanilla_cr():
+    """Paper §II.A: cost-aware clustering achieves higher CR than vanilla.
+
+    Construct data where the trade-off matters: one broad heavy cluster and
+    several tight small ones — vanilla centres chase variance, modified
+    centres chase encodable widths."""
+    rng = np.random.default_rng(42)
+    parts = [
+        (0x1000_0000 + rng.integers(-2_000_000, 2_000_000, 40_000)),   # broad
+        (0x4000_0000 + rng.integers(-6, 7, 8_000)),                    # tight
+        (0x4100_0000 + rng.integers(-6, 7, 8_000)),
+        (0x4200_0000 + rng.integers(-6, 7, 8_000)),
+    ]
+    data = np.concatenate(parts).astype(np.uint32)
+    rng.shuffle(data)
+    crs = {}
+    for modified in (True, False):
+        cfg = gbdi.GBDIConfig(num_bases=6, modified_kmeans=modified, seed=1)
+        crs[modified] = _cr(data, gbdi.fit(data, cfg))
+    assert crs[True] >= crs[False] * 0.999, crs  # modified never meaningfully worse
+
+
+def test_empty_cluster_reseeding():
+    """Duplicate/starved centroids must relocate (coverage regression test)."""
+    rng = np.random.default_rng(3)
+    data = np.concatenate([
+        np.full(20_000, 500, np.int64),                # one dominant value
+        rng.integers(10_000, 10_050, 200),             # tiny distant cluster
+        rng.integers(-90_000, -89_950, 200),
+    ])
+    bases, _ = fit_bases(
+        jnp.asarray(data, jnp.int32), num_bases=4, width_set=(4, 8), word_bits=32, iters=15,
+    )
+    bases = np.asarray(bases)
+    assert np.abs(bases - 10_025).min() < 100
+    assert np.abs(bases + 89_975).min() < 100
+
+
+def test_host_wrapper_filters_zeros_and_samples():
+    rng = np.random.default_rng(9)
+    data = np.where(rng.random(200_000) < 0.9, 0, 12_345 + rng.integers(0, 5, 200_000)).astype(np.uint32)
+    bases, widths = fit_bases_host(data, num_bases=4, width_set=(4, 8), word_bits=32, sample_words=4096)
+    assert (np.abs(np.asarray(bases) - 12_347) < 50).any()
