@@ -1,63 +1,54 @@
-"""Paper §VI main result: GBDI compression ratio per workload class.
+"""Paper §VI main result, driven by the unified eval subsystem.
 
-Columns mirror the paper's figure: per-benchmark CR for GBDI and the BDI
-baseline, plus C-family / Java-family / overall averages.  Validation
-targets (paper): Java ~1.55x, C ~1.4x, overall 1.4-1.45x, GBDI > BDI.
+Per-workload CR for GBDI and the B∆I baseline over every registered
+family — the paper's dump classes (C/Java) plus the column-store and
+ML-tensor families this repo adds — with per-cell lossless verification
+done inside :mod:`repro.eval`.  Validation targets (paper): Java ~1.55x,
+C ~1.4x, overall 1.4-1.45x, GBDI > BDI.
 """
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-from repro.core import bdi, gbdi
-from repro.data import workloads
+from repro.eval.codecs import default_codecs
+from repro.eval.run import csv_lines, evaluate, geomean
+from repro.eval.workloads import default_workloads
 
 MB = 4 << 20
 
 
-def run(n_bytes: int = MB, seed: int = 0) -> list[dict]:
-    rows = []
-    for name, (kind, _) in workloads.WORKLOADS.items():
-        data = workloads.generate(name, n_bytes=n_bytes, seed=seed)
-        t0 = time.perf_counter()
-        model = gbdi.fit(data)
-        blob = gbdi.encode(data, model)
-        t_enc = time.perf_counter() - t0
-        assert np.array_equal(gbdi.decode(blob), gbdi.to_words(data, 32))
-        cr_gbdi = gbdi.compression_ratio(blob)
-        cr_bdi = bdi.compression_ratio(bdi.compress(data))
-        rows.append({
-            "workload": name, "kind": kind,
-            "cr_gbdi": cr_gbdi, "cr_bdi": cr_bdi,
-            "enc_us_per_mb": t_enc / (n_bytes / (1 << 20)) * 1e6,
-        })
-    return rows
+def run(n_bytes: int = MB, seed: int = 0, suite: str = "all",
+        codecs: str = "gbdi,bdi") -> list:
+    cells = evaluate(default_workloads(), default_codecs(),
+                     suite=suite, codecs=codecs, n_bytes=n_bytes, seed=seed)
+    bad = [c for c in cells if not c.verified]
+    assert not bad, [f"{c.workload}/{c.codec}: {c.error}" for c in bad]
+    return cells
 
 
-def summarize(rows: list[dict]) -> dict:
-    c = [r["cr_gbdi"] for r in rows if r["kind"] == "C"]
-    j = [r["cr_gbdi"] for r in rows if r["kind"] == "Java"]
-    allr = [r["cr_gbdi"] for r in rows]
-    bdi_all = [r["cr_bdi"] for r in rows]
-    gmean = lambda xs: float(np.exp(np.mean(np.log(xs))))
+def summarize(cells: list) -> dict:
+    gbdi = [c for c in cells if c.codec == "gbdi"]
+    by_kind = lambda k: (c.compression_ratio for c in gbdi if c.kind == k)
     return {
-        "cr_c_avg": gmean(c), "cr_java_avg": gmean(j), "cr_all_avg": gmean(allr),
-        "cr_bdi_avg": gmean(bdi_all),
+        "cr_c_avg": geomean(by_kind("C")),
+        "cr_java_avg": geomean(by_kind("Java")),
+        "cr_column_avg": geomean(by_kind("Column")),
+        "cr_ml_avg": geomean(by_kind("ML")),
+        "cr_all_avg": geomean(c.compression_ratio for c in gbdi),
+        "cr_bdi_avg": geomean(c.compression_ratio for c in cells if c.codec == "bdi"),
         "paper_c": 1.4, "paper_java": 1.55, "paper_all": 1.45,
     }
 
 
 def main():
-    rows = run()
-    for r in rows:
-        print(f"compression/{r['workload']},{r['enc_us_per_mb']:.1f},"
-              f"gbdi={r['cr_gbdi']:.3f};bdi={r['cr_bdi']:.3f};kind={r['kind']}")
-    s = summarize(rows)
+    cells = run()
+    for line in csv_lines(cells):
+        print(line.replace("eval/", "compression/", 1))
+    s = summarize(cells)
     print(f"compression/summary,0,"
-          f"c={s['cr_c_avg']:.3f};java={s['cr_java_avg']:.3f};all={s['cr_all_avg']:.3f};"
-          f"bdi={s['cr_bdi_avg']:.3f};paper_c={s['paper_c']};paper_java={s['paper_java']}")
-    return rows, s
+          f"c={s['cr_c_avg']:.3f};java={s['cr_java_avg']:.3f};"
+          f"column={s['cr_column_avg']:.3f};ml={s['cr_ml_avg']:.3f};"
+          f"all={s['cr_all_avg']:.3f};bdi={s['cr_bdi_avg']:.3f};"
+          f"paper_c={s['paper_c']};paper_java={s['paper_java']}")
+    return cells, s
 
 
 if __name__ == "__main__":

@@ -15,7 +15,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.gbdi_fr import fit_fr_bases
-from repro.distributed.collectives import GRAD_FR, compressed_pod_mean, plain_pod_mean
+from repro.distributed.collectives import (
+    GRAD_FR,
+    compressed_pod_mean,
+    plain_pod_mean,
+    pod_shard_map,
+)
 from repro.launch.hlo_stats import analyze_module
 
 
@@ -33,12 +38,9 @@ def main():
     bases = fit_fr_bases(words, GRAD_FR)
 
     specs = {k: P("pod") for k in grads}
-    f_c = jax.jit(jax.shard_map(
-        lambda g: compressed_pod_mean(g, bases, n_pods=2),
-        mesh=mesh, in_specs=(specs,), out_specs=specs, axis_names={"pod"}, check_vma=False))
-    f_p = jax.jit(jax.shard_map(
-        plain_pod_mean, mesh=mesh, in_specs=(specs,), out_specs=specs,
-        axis_names={"pod"}, check_vma=False))
+    f_c = jax.jit(pod_shard_map(
+        lambda g: compressed_pod_mean(g, bases, n_pods=2), mesh, (specs,), specs))
+    f_p = jax.jit(pod_shard_map(plain_pod_mean, mesh, (specs,), specs))
 
     out_c, out_p = f_c(grads), f_p(grads)
     err = max(float(jnp.abs(out_c[k] - out_p[k]).max()) for k in grads)

@@ -27,6 +27,19 @@ def main():
     # 4. the paper's baseline for contrast
     print(f"BDI  compression ratio: {bdi.compression_ratio(bdi.compress(dump)):.3f}x")
 
+    # 5. the same measurement through the unified eval subsystem — every
+    #    registered codec over a workload, roundtrip-verified per cell:
+    #    (full sweep: PYTHONPATH=src python -m repro.eval.run --suite all)
+    from repro.eval.codecs import default_codecs
+    from repro.eval.run import evaluate, format_table
+    from repro.eval.workloads import default_workloads
+
+    cells = evaluate(default_workloads(), default_codecs(),
+                     suite="605.mcf_s,java_svm", codecs="gbdi,bdi",
+                     n_bytes=1 << 18)
+    print()
+    print(format_table(cells))
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,1 @@
+"""Optional-dependency shims (the container may lack extras like hypothesis)."""

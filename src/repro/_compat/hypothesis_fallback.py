@@ -1,0 +1,160 @@
+"""A tiny deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The real dependency is declared in ``pyproject.toml`` (``.[test]``) and is
+used whenever present — this fallback only activates via
+``tests/conftest.py`` when the import fails, so the property-based suites
+still *collect and run* in hermetic containers that cannot pip-install.
+
+It implements exactly the surface the test-suite uses — ``given``,
+``settings``, and the ``integers / sampled_from / tuples / lists / data``
+strategies — by drawing from a seeded ``random.Random`` per example, with
+example 0 pinned to each strategy's minimum (lo bound / empty list) so the
+degenerate edges the real shrinker would find are always exercised.  It is
+NOT a property-testing engine: no shrinking, no database, no coverage
+guidance.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+
+_SEED = 0xC0FFEE
+# Fallback examples are capped: every distinct input shape recompiles the
+# jitted codec paths on CPU, which is where the old suite lost minutes.
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "10"))
+
+
+class Strategy:
+    def __init__(self, draw, min_draw=None):
+        self._draw = draw
+        self._min_draw = min_draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def min_example(self):
+        if self._min_draw is None:
+            raise NotImplementedError
+        return self._min_draw()
+
+    # hypothesis API niceties used by some suites
+    def map(self, f):
+        return Strategy(lambda r: f(self._draw(r)),
+                        None if self._min_draw is None else (lambda: f(self._min_draw())))
+
+    def filter(self, pred):
+        def drawer(r):
+            for _ in range(1000):
+                v = self._draw(r)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return Strategy(drawer)
+
+
+def integers(min_value=0, max_value=None) -> Strategy:
+    hi = (1 << 63) - 1 if max_value is None else max_value
+    return Strategy(lambda r: r.randint(min_value, hi), lambda: min_value)
+
+
+def sampled_from(seq) -> Strategy:
+    seq = list(seq)
+    return Strategy(lambda r: seq[r.randrange(len(seq))], lambda: seq[0])
+
+
+def booleans() -> Strategy:
+    return sampled_from([False, True])
+
+
+def tuples(*strategies) -> Strategy:
+    return Strategy(lambda r: tuple(s.draw(r) for s in strategies),
+                    lambda: tuple(s.min_example() for s in strategies))
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size: int = 10) -> Strategy:
+    return Strategy(
+        lambda r: [elements.draw(r) for _ in range(r.randint(min_size, max_size))],
+        lambda: [elements.min_example() for _ in range(min_size)],
+    )
+
+
+class DataObject:
+    """What ``st.data()`` hands the test: an interactive drawer."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: Strategy, label: str | None = None):
+        return strategy.draw(self._rnd)
+
+
+class _DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(None)
+
+
+def data() -> _DataStrategy:
+    return _DataStrategy()
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    """Decorator recording the example budget on the test function."""
+
+    def deco(f):
+        f._fallback_max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(*strategies):
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            budget = getattr(wrapper, "_fallback_max_examples",
+                             getattr(f, "_fallback_max_examples", 20))
+            n = min(budget, _MAX_EXAMPLES_CAP)
+            has_data = any(isinstance(s, _DataStrategy) for s in strategies)
+            start = 0
+            if not has_data:  # example 0: every strategy at its minimum
+                try:
+                    f(*args, *[s.min_example() for s in strategies], **kwargs)
+                    start = 1
+                except NotImplementedError:
+                    start = 0
+            for i in range(start, n):
+                rnd = random.Random(_SEED + i)
+                vals = [DataObject(rnd) if isinstance(s, _DataStrategy) else s.draw(rnd)
+                        for s in strategies]
+                f(*args, *vals, **kwargs)
+
+        # pytest must not mistake the given-supplied parameters for fixtures
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Register this shim as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    if "hypothesis" in sys.modules:
+        return sys.modules["hypothesis"]
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None,
+                                            filter_too_much=None)
+    hyp.__is_repro_fallback__ = True
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "tuples", "lists", "data"):
+        setattr(st_mod, name, globals()[name])
+    hyp.strategies = st_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    return hyp

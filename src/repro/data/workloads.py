@@ -14,6 +14,8 @@ validates CR bands, not exact per-file numbers (see DESIGN.md §7):
 """
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 
@@ -124,6 +126,44 @@ def java_matrixfactorization(rng, n_bytes):
     return _interleave(rng, [fac.view(np.uint32), idx, hdr])
 
 
+# ---------------------------------------------------------------------------
+# Column-store analytics families (Lin et al., "Data Compression for
+# Analytics over Large-scale In-memory Column Databases").  In-memory column
+# segments have value structure GBDI was never evaluated on in the paper:
+# near-monotone surrogate keys, dictionary code ids, fixed-point measures.
+# ---------------------------------------------------------------------------
+
+def col_int_keys(rng, n_bytes):
+    """Sorted 64-bit surrogate keys (skewed gaps) + epoch-second timestamps.
+
+    Keys are globally monotone, so consecutive values share a handful of
+    high-order "bases" — inter-block locality per-block BDI cannot see.
+    """
+    n = n_bytes // 8
+    gaps = np.minimum(rng.zipf(1.7, n // 2), 1 << 12).astype(np.uint64)
+    keys = (np.uint64(1) << np.uint64(40)) + np.cumsum(gaps)
+    ts = (np.uint64(1_700_000_000) + np.cumsum(rng.poisson(3, n // 2))).astype(np.uint64)
+    return _interleave(rng, [keys.view(np.uint32), ts.astype(np.uint32)])
+
+
+def col_dict_codes(rng, n_bytes):
+    """Dictionary-encoded string column: zipf-skewed code ids into a 4k
+    dictionary, plus the monotone offsets array of the dictionary heap."""
+    n = n_bytes // 4
+    codes = (rng.zipf(1.3, n // 2) % 4096).astype(np.uint32)
+    offsets = np.cumsum(rng.integers(4, 24, n // 3)).astype(np.uint32)
+    return _interleave(rng, [codes, offsets, np.zeros(n // 8, np.uint32)])
+
+
+def col_decimal_prices(rng, n_bytes):
+    """Fixed-point decimal measure column (prices in cents, lognormal)
+    + small-int quantities — the classic fact-table pair."""
+    n = n_bytes // 4
+    cents = np.minimum(rng.lognormal(7.5, 1.0, n // 2), 2**31 - 1).astype(np.uint32)
+    qty = rng.integers(1, 100, n // 2).astype(np.uint32)
+    return _interleave(rng, [cents, qty])
+
+
 WORKLOADS = {
     "605.mcf_s": ("C", spec_mcf),
     "600.perlbench_s": ("C", spec_perlbench),
@@ -134,9 +174,18 @@ WORKLOADS = {
     "java_trianglecount": ("Java", java_trianglecount),
     "java_svm": ("Java", java_svm),
     "java_matrixfactorization": ("Java", java_matrixfactorization),
+    "col_int_keys": ("Column", col_int_keys),
+    "col_dict_codes": ("Column", col_dict_codes),
+    "col_decimal_prices": ("Column", col_decimal_prices),
 }
+
+
+def _stable_seed(name: str, seed: int) -> int:
+    # NOT hash(): Python string hashing is salted per process, which made
+    # every run generate different "dumps" and CR numbers unreproducible.
+    return (seed ^ zlib.crc32(name.encode())) % (1 << 31)
 
 
 def generate(name: str, n_bytes: int = 4 << 20, seed: int = 0) -> np.ndarray:
     kind, fn = WORKLOADS[name]
-    return fn(np.random.default_rng(seed ^ hash(name) % (1 << 31)), n_bytes)
+    return fn(np.random.default_rng(_stable_seed(name, seed)), n_bytes)

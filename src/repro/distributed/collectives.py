@@ -30,6 +30,30 @@ from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
 GRAD_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14, delta_bits=8, outlier_cap=64)
 
 
+def pod_shard_map(f, mesh, in_specs, out_specs, *, manual_axes=("pod",)):
+    """shard_map manual over ``manual_axes`` only, across jax versions.
+
+    jax >= 0.7 spells this ``jax.shard_map(..., axis_names=...)``; 0.4.x
+    spells it ``jax.experimental.shard_map.shard_map(..., auto=<the other
+    axes>)``.  Replica/varying checks are disabled in both — the compressed
+    ring exchange is deliberately non-replicated across pods.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(manual_axes), check_vma=False,
+        )
+    # 0.4.x: partial-auto (auto=...) trips an XLA partitioner check
+    # (IsManualSubgroup), so go fully manual over every mesh axis.  The
+    # exchange body is elementwise over the non-pod axes, so the result is
+    # identical — only automatic sharding propagation inside is lost.
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False,
+    )
+
+
 def _encode_leaf(g: jax.Array, bases):
     flat = g.astype(jnp.bfloat16).reshape(-1)
     words = jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.int32)

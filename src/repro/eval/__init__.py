@@ -1,0 +1,33 @@
+"""Unified workload-evaluation subsystem.
+
+The paper's contribution is measuring GBDI "on a broader range of
+workloads"; this package is the measurement harness that makes that claim
+testable for every codec in the repo:
+
+* :mod:`repro.eval.registry` — ``WorkloadRegistry`` / ``CodecRegistry``
+  plus the dataclasses they hand out;
+* :mod:`repro.eval.workloads` — the default registry: all synthetic
+  memory-dump families from :mod:`repro.data.workloads` plus ML-tensor
+  families (model weights, AdamW moments, gradients, KV-cache pages)
+  derived from the live :mod:`repro.models` stack;
+* :mod:`repro.eval.codecs` — ``fit/encode/decode/size_bits`` adapters over
+  the host GBDI codec, the B∆I baseline, and GBDI-FR (jnp oracle and
+  Pallas-kernel backends);
+* :mod:`repro.eval.run` — the CLI:
+  ``python -m repro.eval.run --suite all --codec gbdi,bdi,fr``.
+
+Every cell (workload x codec) is roundtrip-verified; lossless codecs must
+be bit-exact, the fixed-rate codec must be exact outside dropped outliers.
+"""
+from repro.eval.registry import (  # noqa: F401
+    CodecRegistry,
+    EvalCell,
+    Workload,
+    WorkloadRegistry,
+)
+from repro.eval.workloads import default_workloads  # noqa: F401
+from repro.eval.codecs import default_codecs  # noqa: F401
+
+# NOTE: repro.eval.run is the CLI module (`python -m repro.eval.run`); it is
+# deliberately not imported here so runpy doesn't see it pre-imported.
+

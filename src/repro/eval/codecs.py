@@ -1,0 +1,152 @@
+"""``fit/encode/decode/size_bits`` adapters over the repo's codec paths.
+
+The four concrete codecs are the paper's GBDI host codec
+(:mod:`repro.core.gbdi`), the B∆I baseline (:mod:`repro.core.bdi`), and
+the fixed-rate device format GBDI-FR in both its pure-jnp oracle and
+Pallas-kernel backends (:mod:`repro.core.gbdi_fr`, :mod:`repro.kernels`).
+
+The adapter contract (duck-typed, see :class:`repro.eval.registry.CodecRegistry`):
+
+* ``fit(data) -> model`` — offline background analysis (may be ``None``);
+* ``encode(data, model) -> blob``;
+* ``decode(blob) -> np.ndarray`` of unsigned words (``word_bits`` wide);
+* ``size_bits(blob) -> int`` — exact compressed size incl. global tables;
+* ``lossless`` — whether bit-exact roundtrip is *guaranteed* (GBDI-FR is
+  only capacity-bounded lossless: cells report ``dropped_words`` and the
+  verifier checks mismatches are confined to dropped outliers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import bdi, gbdi
+from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode
+from repro.eval.registry import CodecRegistry
+
+
+@dataclasses.dataclass
+class GBDICodec:
+    """Paper-faithful host codec: variable-length bit stream, lossless."""
+
+    word_bits: int = 32
+    name: str = "gbdi"
+    lossless: bool = True
+
+    def _config(self) -> gbdi.GBDIConfig:
+        widths = (4, 8) if self.word_bits == 16 else (4, 8, 16, 24)
+        return gbdi.GBDIConfig(word_bits=self.word_bits, width_set=widths)
+
+    def fit(self, data: np.ndarray) -> gbdi.GBDIModel:
+        return gbdi.fit(data, self._config())
+
+    def encode(self, data: np.ndarray, model: gbdi.GBDIModel) -> dict[str, Any]:
+        return gbdi.encode(data, model)
+
+    def decode(self, blob: dict[str, Any]) -> np.ndarray:
+        return gbdi.decode(blob)
+
+    def size_bits(self, blob: dict[str, Any]) -> int:
+        return gbdi.compressed_size_bits(blob)
+
+
+@dataclasses.dataclass
+class BDICodec:
+    """Per-block B∆I baseline (byte blocks; word_bits only names the view)."""
+
+    word_bits: int = 32
+    name: str = "bdi"
+    lossless: bool = True
+
+    def fit(self, data: np.ndarray) -> None:
+        return None  # no global state — that is the contrast with GBDI
+
+    def encode(self, data: np.ndarray, model: None) -> dict[str, Any]:
+        blob = bdi.compress(data)
+        blob["_word_bits"] = self.word_bits
+        return blob
+
+    def decode(self, blob: dict[str, Any]) -> np.ndarray:
+        wb = blob["_word_bits"]
+        return bdi.decompress(blob).view(np.uint16 if wb == 16 else np.uint32)
+
+    def size_bits(self, blob: dict[str, Any]) -> int:
+        return bdi.compressed_size_bits(blob)
+
+
+@dataclasses.dataclass
+class FRCodec:
+    """GBDI-FR fixed-rate pages via the jnp oracle or the Pallas kernels.
+
+    Capacity-bounded lossless: per-page outliers beyond ``outlier_cap`` are
+    re-coded as clamped deltas; ``blob['n_dropped']`` counts them and the
+    eval verifier bounds mismatches by that count.
+    """
+
+    word_bits: int = 16
+    backend: str = "ref"          # "ref" (jnp oracle) | "kernel" (Pallas)
+    name: str = "fr"
+    lossless: bool = False
+
+    def _config(self) -> FRConfig:
+        if self.word_bits == 16:
+            return FRConfig(word_bits=16, page_words=2048, num_bases=14,
+                            delta_bits=8, outlier_cap=64)
+        return FRConfig(word_bits=32, page_words=2048, num_bases=14,
+                        delta_bits=16, outlier_cap=128)
+
+    def fit(self, data: np.ndarray):
+        import jax.numpy as jnp
+
+        cfg = self._config()
+        words = gbdi.to_words(data, cfg.word_bits)
+        signed = gbdi.words_to_signed(words, cfg.word_bits)
+        sample = signed[: 1 << 16]
+        return fit_fr_bases(jnp.asarray(sample, dtype=jnp.int32), cfg)
+
+    def encode(self, data: np.ndarray, bases) -> dict[str, Any]:
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        cfg = self._config()
+        words = gbdi.to_words(data, cfg.word_bits)
+        signed = gbdi.words_to_signed(words, cfg.word_bits)
+        n = signed.size
+        pad = (-n) % cfg.page_words
+        pages = np.pad(signed, (0, pad)).reshape(-1, cfg.page_words)
+        blob = dict(ops.encode_pages(jnp.asarray(pages), bases, cfg, backend=self.backend))
+        blob.update(_bases=bases, _cfg=cfg, _n_words=n)
+        return blob
+
+    def decode(self, blob: dict[str, Any]):
+        from repro.kernels import ops
+
+        cfg: FRConfig = blob["_cfg"]
+        pages = ops.decode_pages(
+            {k: v for k, v in blob.items() if not k.startswith("_")},
+            blob["_bases"], cfg, backend=self.backend,
+        )
+        signed = np.asarray(pages).reshape(-1)[: blob["_n_words"]]
+        return gbdi.signed_to_words(signed, cfg.word_bits)
+
+    def size_bits(self, blob: dict[str, Any]) -> int:
+        cfg: FRConfig = blob["_cfg"]
+        n_pages = int(np.asarray(blob["n_out"]).shape[0])
+        table_bits = cfg.num_bases * cfg.word_bits
+        return n_pages * cfg.compressed_bytes_per_page() * 8 + table_bits
+
+    def dropped_words(self, blob: dict[str, Any]) -> int:
+        return int(np.asarray(blob["n_dropped"]).sum())
+
+
+def default_codecs() -> CodecRegistry:
+    reg = CodecRegistry()
+    reg.register("gbdi", lambda wb: GBDICodec(word_bits=wb))
+    reg.register("bdi", lambda wb: BDICodec(word_bits=wb))
+    reg.register("fr", lambda wb: FRCodec(word_bits=wb, backend="ref"))
+    reg.register("fr_kernel", lambda wb: FRCodec(word_bits=wb, backend="kernel",
+                                                 name="fr_kernel"))
+    return reg

@@ -1,0 +1,225 @@
+"""Run every registered codec over every registered workload.
+
+  PYTHONPATH=src python -m repro.eval.run --suite all --codec gbdi,bdi,fr
+  PYTHONPATH=src python -m repro.eval.run --suite ml,column --codec gbdi \
+      --bytes 262144 --json experiments/BENCH_eval.json
+
+Per cell the runner fits, encodes, decodes, **verifies the roundtrip**
+(bit-exact for lossless codecs; for the fixed-rate codec, mismatching
+words must not exceed the reported dropped-outlier count), and records
+CR / bits-per-word / encode throughput.  Output is an aligned stdout
+table, ``name,us_per_call,derived`` CSV lines matching the ``benchmarks/``
+convention, and a ``BENCH_*.json``-style artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.eval.registry import CodecRegistry, EvalCell, Workload, WorkloadRegistry
+
+
+def evaluate_cell(
+    workload: Workload,
+    codec,
+    data: np.ndarray,
+    *,
+    verify: bool = True,
+) -> EvalCell:
+    """Measure one (workload, codec) pair on already-generated ``data``."""
+    from repro.core.gbdi import to_words
+
+    n_bytes = int(np.ascontiguousarray(data).view(np.uint8).size)
+    wb = codec.word_bits
+    n_words = (n_bytes * 8 + wb - 1) // wb
+
+    t0 = time.perf_counter()
+    model = codec.fit(data)          # offline background analysis —
+    fit_s = time.perf_counter() - t0  # not part of encode throughput
+    t0 = time.perf_counter()
+    blob = codec.encode(data, model)
+    size_bits = int(codec.size_bits(blob))
+    enc_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    decoded = np.asarray(codec.decode(blob)).reshape(-1)
+    dec_s = time.perf_counter() - t0
+
+    ref = to_words(data, wb)
+    got = decoded[: ref.size]
+    mism = int(np.count_nonzero(got != ref))
+    exact_frac = 1.0 - mism / max(1, ref.size)
+    lossless = mism == 0
+
+    verified, error = True, ""
+    if verify:
+        if codec.lossless and mism:
+            verified = False
+            error = f"lossless codec mismatched {mism}/{ref.size} words"
+        elif not codec.lossless:
+            dropped = codec.dropped_words(blob) if hasattr(codec, "dropped_words") else 0
+            if mism > dropped:
+                verified = False
+                error = f"{mism} mismatches > {dropped} dropped outliers"
+
+    return EvalCell(
+        workload=workload.name,
+        kind=workload.kind,
+        codec=codec.name,
+        n_bytes=n_bytes,
+        word_bits=wb,
+        compression_ratio=n_words * wb / max(1, size_bits),
+        bits_per_word=size_bits / max(1, n_words),
+        fit_s=fit_s,
+        encode_s=enc_s,
+        decode_s=dec_s,
+        encode_mb_s=n_bytes / (1 << 20) / max(enc_s, 1e-9),
+        lossless=lossless,
+        exact_frac=exact_frac,
+        verified=verified,
+        error=error,
+    )
+
+
+def evaluate(
+    workload_registry: WorkloadRegistry,
+    codec_registry: CodecRegistry,
+    *,
+    suite: str = "all",
+    codecs: str = "gbdi,bdi,fr",
+    n_bytes: int = 1 << 20,
+    seed: int = 0,
+    verify: bool = True,
+) -> list[EvalCell]:
+    cells: list[EvalCell] = []
+    codec_names = [c.strip() for c in codecs.split(",") if c.strip()]
+    for wl in workload_registry.select(suite):
+        data = wl.generate(n_bytes, seed)
+        for cname in codec_names:
+            codec = codec_registry.make(cname, wl.word_bits)
+            try:
+                cells.append(evaluate_cell(wl, codec, data, verify=verify))
+            except Exception as e:  # keep the sweep alive, report the cell red
+                cells.append(EvalCell(
+                    workload=wl.name, kind=wl.kind, codec=cname,
+                    n_bytes=n_bytes, word_bits=wl.word_bits,
+                    compression_ratio=0.0, bits_per_word=0.0,
+                    fit_s=0.0, encode_s=0.0, decode_s=0.0, encode_mb_s=0.0,
+                    lossless=False, exact_frac=0.0, verified=False,
+                    error=f"{type(e).__name__}: {e}",
+                ))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+def geomean(xs) -> float:
+    """Geometric mean of CRs (0.0 for an empty set) — the one shared by
+    the table, bench_compression and any consumer of BENCH_eval.json."""
+    xs = list(xs)
+    if not xs:
+        return 0.0
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+
+
+def format_table(cells: list[EvalCell]) -> str:
+    hdr = f"{'workload':<26} {'kind':<7} {'codec':<10} {'CR':>7} {'bits/w':>7} " \
+          f"{'enc MB/s':>9} {'exact':>7} {'ok':>3}"
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        ok = "yes" if c.verified else "NO"
+        lines.append(
+            f"{c.workload:<26} {c.kind:<7} {c.codec:<10} {c.compression_ratio:>7.3f} "
+            f"{c.bits_per_word:>7.2f} {c.encode_mb_s:>9.1f} {c.exact_frac:>7.4f} {ok:>3}"
+        )
+    kinds = sorted({c.kind for c in cells})
+    for codec in sorted({c.codec for c in cells}):
+        sub = [c for c in cells if c.codec == codec and c.compression_ratio > 0]
+        if not sub:
+            continue
+        per_kind = "  ".join(
+            f"{k}={geomean(c.compression_ratio for c in sub if c.kind == k):.3f}"
+            for k in kinds if any(c.kind == k for c in sub)
+        )
+        lines.append(f"geomean CR [{codec:<9}] {per_kind}  "
+                     f"all={geomean(c.compression_ratio for c in sub):.3f}")
+    return "\n".join(lines)
+
+
+def csv_lines(cells: list[EvalCell]) -> list[str]:
+    """``name,us_per_call,derived`` rows, the benchmarks/run.py convention."""
+    return [
+        f"eval/{c.workload}/{c.codec},{c.encode_s * 1e6:.1f},"
+        f"cr={c.compression_ratio:.3f};bpw={c.bits_per_word:.2f};"
+        f"exact={c.exact_frac:.4f};kind={c.kind};ok={int(c.verified)}"
+        for c in cells
+    ]
+
+
+def to_artifact(cells: list[EvalCell], *, suite: str, codecs: str,
+                n_bytes: int, seed: int) -> dict:
+    return {
+        "bench": "eval",
+        "suite": suite,
+        "codecs": codecs,
+        "n_bytes": n_bytes,
+        "seed": seed,
+        "rows": [c.to_json() for c in cells],
+    }
+
+
+def main(argv: list[str] | None = None) -> list[EvalCell]:
+    from repro.eval.codecs import default_codecs
+    from repro.eval.workloads import default_workloads
+
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--suite", default="all",
+                    help="'all', or comma list of kinds (c,java,column,ml) "
+                         "and/or workload names")
+    ap.add_argument("--codec", default="gbdi,bdi,fr",
+                    help="comma list from: gbdi, bdi, fr, fr_kernel")
+    ap.add_argument("--bytes", type=int, default=1 << 20, dest="n_bytes",
+                    help="stream size per workload (default 1 MiB)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument("--json", default="", help="write BENCH_*.json artifact here")
+    ap.add_argument("--csv", action="store_true",
+                    help="also print benchmarks/-style CSV lines")
+    args = ap.parse_args(argv)
+
+    try:
+        cells = evaluate(
+            default_workloads(), default_codecs(),
+            suite=args.suite, codecs=args.codec, n_bytes=args.n_bytes,
+            seed=args.seed, verify=not args.no_verify,
+        )
+    except KeyError as e:  # unknown suite/workload/codec: clean CLI error
+        raise SystemExit(f"error: {e.args[0] if e.args else e}")
+    print(format_table(cells))
+    if args.csv:
+        for line in csv_lines(cells):
+            print(line)
+    if args.json:
+        from pathlib import Path
+
+        p = Path(args.json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(
+            to_artifact(cells, suite=args.suite, codecs=args.codec,
+                        n_bytes=args.n_bytes, seed=args.seed), indent=2))
+        print(f"wrote {p}")
+    bad = [c for c in cells if not c.verified]
+    if bad:
+        raise SystemExit(f"{len(bad)} cells failed verification: "
+                         + ", ".join(f"{c.workload}/{c.codec}" for c in bad))
+    return cells
+
+
+if __name__ == "__main__":
+    main()

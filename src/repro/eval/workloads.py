@@ -1,0 +1,131 @@
+"""The default workload table: memory dumps + ML-tensor families.
+
+Dump families (C/Java/Column kinds) come straight from
+:mod:`repro.data.workloads`.  The ML families below extend the paper's
+"broader range of workloads" to the tensors this repo actually serves:
+
+* ``ml_weights_fp32`` / ``ml_weights_bf16`` — real initialised weights of
+  the reduced transformer stack (:mod:`repro.models`), flattened by bit
+  pattern;
+* ``ml_adamw_moments`` — first/second AdamW moments after real update
+  steps (zeros-heavy m, tiny-positive v: the checkpoint-compression case);
+* ``ml_grads_bf16`` — autodiff gradients of the LM loss in bf16, the
+  cross-pod transport distribution (:mod:`repro.distributed.collectives`);
+* ``ml_kvcache_bf16`` — channel-structured attention K/V in bf16 (per-
+  channel means + small noise), the serving cache distribution
+  (:mod:`repro.serving.kv_cache`).
+
+Model-derived tensors have a fixed intrinsic size, so streams are tiled /
+trimmed to the requested ``n_bytes`` — value structure, not length, is
+what CR depends on.  Generation is deterministic in ``seed`` across
+processes (PRNGKey-seeded; regression-tested in ``tests/test_eval.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.data import workloads as dump_workloads
+from repro.eval.registry import Workload, WorkloadRegistry
+
+
+def _fit_bytes(buf: np.ndarray, n_bytes: int) -> np.ndarray:
+    """Tile/trim a byte view to n_bytes (structure matters, length doesn't)."""
+    raw = np.ascontiguousarray(buf).view(np.uint8).reshape(-1)
+    return np.resize(raw, n_bytes)
+
+
+@functools.lru_cache(maxsize=4)
+def _model_state(seed: int):
+    """Init the reduced transformer once per seed; share across families."""
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.data.pipeline import PipelineConfig, TokenPipeline
+    from repro.models.api import build_model
+    from repro.optim import adamw
+
+    cfg = reduced(ARCHS["deepseek-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    pipe = TokenPipeline(PipelineConfig(cfg.vocab_size, 32, 4, seed=seed))
+    batch = {"tokens": np.asarray(pipe.batch_at(0)["tokens"], np.int32)}
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    state = adamw.init_state(params)
+    acfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    for _ in range(2):
+        params, state, _ = adamw.apply_updates(acfg, params, grads, state)
+    return params, grads, state
+
+
+def _leaves_fp32(tree) -> np.ndarray:
+    import jax
+
+    return np.concatenate(
+        [np.asarray(x, np.float32).reshape(-1) for x in jax.tree.leaves(tree)]
+    )
+
+
+def _to_bf16_words(x: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    return np.asarray(jnp.asarray(x).astype(jnp.bfloat16)).view(np.uint16)
+
+
+def ml_weights_fp32(n_bytes: int, seed: int) -> np.ndarray:
+    params, _, _ = _model_state(seed)
+    return _fit_bytes(_leaves_fp32(params), n_bytes).view(np.uint32)
+
+
+def ml_weights_bf16(n_bytes: int, seed: int) -> np.ndarray:
+    params, _, _ = _model_state(seed)
+    return _fit_bytes(_to_bf16_words(_leaves_fp32(params)), n_bytes).view(np.uint16)
+
+
+def ml_adamw_moments(n_bytes: int, seed: int) -> np.ndarray:
+    _, _, state = _model_state(seed)
+    mv = np.concatenate([_leaves_fp32(state["m"]), _leaves_fp32(state["v"])])
+    return _fit_bytes(mv, n_bytes).view(np.uint32)
+
+
+def ml_grads_bf16(n_bytes: int, seed: int) -> np.ndarray:
+    _, grads, _ = _model_state(seed)
+    return _fit_bytes(_to_bf16_words(_leaves_fp32(grads)), n_bytes).view(np.uint16)
+
+
+def ml_kvcache_bf16(n_bytes: int, seed: int) -> np.ndarray:
+    n_kv, hd = 4, 32
+    rng = np.random.default_rng(seed)
+    n_tok = max(1, n_bytes // (2 * n_kv * hd))
+    ch = rng.normal(0, 1, (1, n_kv, hd)) * 2            # per-channel means
+    kv = (ch + rng.normal(0, 0.1, (n_tok, n_kv, hd))).astype(np.float32)
+    return _fit_bytes(_to_bf16_words(kv.reshape(-1)), n_bytes).view(np.uint16)
+
+
+_ML_FAMILIES = [
+    ("ml_weights_fp32", ml_weights_fp32, 32, "reduced-transformer weights, fp32"),
+    ("ml_weights_bf16", ml_weights_bf16, 16, "reduced-transformer weights, bf16"),
+    ("ml_adamw_moments", ml_adamw_moments, 32, "AdamW m/v moments after real steps"),
+    ("ml_grads_bf16", ml_grads_bf16, 16, "LM-loss gradients, bf16 transport"),
+    ("ml_kvcache_bf16", ml_kvcache_bf16, 16, "channel-structured attention K/V, bf16"),
+]
+
+
+def default_workloads() -> WorkloadRegistry:
+    reg = WorkloadRegistry()
+    for name, (kind, fn) in dump_workloads.WORKLOADS.items():
+        reg.register(
+            Workload(
+                name=name,
+                kind=kind,
+                generate=functools.partial(dump_workloads.generate, name),
+                word_bits=32,
+                description=(fn.__doc__ or "").strip().splitlines()[0] if fn.__doc__ else "",
+            )
+        )
+    for name, fn, wb, desc in _ML_FAMILIES:
+        reg.register(
+            Workload(name=name, kind="ML", generate=fn, word_bits=wb, description=desc)
+        )
+    return reg

@@ -117,6 +117,8 @@ def analyse(cfg: ModelConfig, sc: ShapeConfig, mesh_name: str, lowered, compile_
     bytes_accessed = stats["hbm_bytes"] * dtype_scale
     coll = {k: v * dtype_scale for k, v in stats["collectives"].items()}
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):  # jax 0.4.x: one dict per program
+        xla_cost = xla_cost[0] if xla_cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

@@ -40,11 +40,24 @@ class Engine:
 
     def admit(self, reqs: list[Request]) -> int:
         """Prefill a batch of requests into free slots (same length prompts
-        share one prefill; production would bucket by length)."""
+        share one prefill; production would bucket by length).
+
+        Admission is refused while any slot is mid-generation: prefill
+        writes cache positions ``0..S`` for *every* batch row and resets the
+        shared decode position, so admitting into a busy batch would corrupt
+        the KV cache and position of in-flight sequences.  (Per-slot
+        admission needs per-slot positions in the model cache — a future
+        scheduler change; callers simply re-offer the request next round.)
+        """
+        if any(r is not None and not r.done for r in self.slot_req):
+            return 0
         free = [i for i, r in enumerate(self.slot_req) if r is None or r.done]
         take = reqs[: len(free)]
         if not take:
             return 0
+        for i in range(self.B):  # done slots are released wholesale
+            if self.slot_req[i] is not None and self.slot_req[i].done:
+                self.slot_req[i] = None
         S = max(len(r.prompt) for r in take)
         toks = np.zeros((self.B, S), np.int32)
         for slot, r in zip(free, take):
@@ -60,7 +73,13 @@ class Engine:
     def tick(self) -> bool:
         """Decode one token for every active slot. Returns any-active."""
         active = [r for r in self.slot_req if r is not None and not r.done]
-        if not active or self.pos >= self.max_len - 1:
+        if not active:
+            return False
+        if self.pos >= self.max_len - 1:
+            # cache ceiling: truncate in-flight requests so their slots
+            # free up — otherwise admit() would refuse new work forever
+            for r in active:
+                r.done = True
             return False
         last = np.zeros((self.B, 1), np.int32)
         for i, r in enumerate(self.slot_req):

@@ -13,6 +13,7 @@
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from pathlib import Path
 from typing import Any, Callable
@@ -44,6 +45,19 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+@functools.lru_cache(maxsize=8)
+def _jitted_train_step(model: Model, opt_cfg: adamw.AdamWConfig, n_micro: int):
+    """One jitted step per (model-config, opt-config, n_micro).
+
+    Model and AdamWConfig are frozen dataclasses, so restart-style code
+    that builds a fresh Trainer (auto-resume, failure recovery, tests)
+    reuses the compiled step instead of paying XLA compilation again.
+    """
+    return jax.jit(
+        make_train_step(model, opt_cfg, n_micro=n_micro), donate_argnums=(0, 1)
+    )
+
+
 class Trainer:
     def __init__(
         self,
@@ -56,9 +70,7 @@ class Trainer:
     ):
         self.model, self.opt_cfg, self.pipe, self.tc = model, opt_cfg, pipe, tc
         self.batch_fn = batch_fn or (lambda step: pipe.batch_at(step))
-        self.step_fn = jax.jit(
-            make_train_step(model, opt_cfg, n_micro=tc.n_micro), donate_argnums=(0, 1)
-        )
+        self.step_fn = _jitted_train_step(model, opt_cfg, tc.n_micro)
         self.fr_bases = None
         self.history: list[dict] = []
 

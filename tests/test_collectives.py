@@ -13,7 +13,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from repro.distributed.collectives import GRAD_FR, compressed_pod_mean, plain_pod_mean
+from repro.distributed.collectives import GRAD_FR, compressed_pod_mean, plain_pod_mean, pod_shard_map
 from repro.core.gbdi_fr import fit_fr_bases
 
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
@@ -34,10 +34,8 @@ def per_pod_plain(gs):
     return plain_pod_mean(gs)
 
 specs = {"w1": P("pod"), "w2": P("pod")}
-f_c = jax.jit(jax.shard_map(per_pod, mesh=mesh, in_specs=(specs,), out_specs=specs,
-                            axis_names={"pod"}, check_vma=False))
-f_p = jax.jit(jax.shard_map(per_pod_plain, mesh=mesh, in_specs=(specs,), out_specs=specs,
-                            axis_names={"pod"}, check_vma=False))
+f_c = jax.jit(pod_shard_map(per_pod, mesh, (specs,), specs))
+f_p = jax.jit(pod_shard_map(per_pod_plain, mesh, (specs,), specs))
 out_c = f_c(grads)
 out_p = f_p(grads)
 for k in grads:

@@ -47,14 +47,28 @@ def _mixed_dump(rng, n=20_000):
     return out
 
 
-@pytest.mark.parametrize("word_bits", [16, 32])
-def test_gbdi_roundtrip_mixed(word_bits):
-    rng = np.random.default_rng(0)
-    data = _mixed_dump(rng)
-    cfg = gbdi.GBDIConfig(word_bits=word_bits, width_set=(4, 8) if word_bits == 16 else (4, 8, 16, 24))
-    model = gbdi.fit(data, cfg)
-    blob = gbdi.encode(data, model)
-    np.testing.assert_array_equal(gbdi.decode(blob), gbdi.to_words(data, word_bits))
+@pytest.fixture(scope="module")
+def mixed_data():
+    return _mixed_dump(np.random.default_rng(0), 12_000)
+
+
+@pytest.fixture(scope="module")
+def mixed_model32(mixed_data):
+    # fitting dominates these tests' runtime — fit once, share per module
+    return gbdi.fit(mixed_data)
+
+
+def test_gbdi_roundtrip_mixed_32(mixed_data, mixed_model32):
+    blob = gbdi.encode(mixed_data, mixed_model32)
+    np.testing.assert_array_equal(gbdi.decode(blob), gbdi.to_words(mixed_data, 32))
+    assert gbdi.compression_ratio(blob) > 1.0
+
+
+def test_gbdi_roundtrip_mixed_16(mixed_data):
+    cfg = gbdi.GBDIConfig(word_bits=16, width_set=(4, 8))
+    model = gbdi.fit(mixed_data, cfg)
+    blob = gbdi.encode(mixed_data, model)
+    np.testing.assert_array_equal(gbdi.decode(blob), gbdi.to_words(mixed_data, 16))
     assert gbdi.compression_ratio(blob) > 1.0
 
 
@@ -95,7 +109,7 @@ def test_gbdi_beats_bdi_on_interblock_locality():
     scattered across blocks)."""
     rng = np.random.default_rng(7)
     centers = np.array([0x10000000, 0x40001234, 0x80005678, 0xC000AAAA], dtype=np.uint32)
-    data = (centers[rng.integers(0, 4, 65536)] + rng.integers(0, 128, 65536)).astype(np.uint32)
+    data = (centers[rng.integers(0, 4, 16384)] + rng.integers(0, 128, 16384)).astype(np.uint32)
     model = gbdi.fit(data)
     cr_gbdi = gbdi.compression_ratio(gbdi.encode(data, model))
     cr_bdi = bdi.compression_ratio(bdi.compress(data))
@@ -103,10 +117,8 @@ def test_gbdi_beats_bdi_on_interblock_locality():
     assert cr_gbdi > 1.5
 
 
-def test_gbdi_size_model_matches_streams():
-    rng = np.random.default_rng(3)
-    data = _mixed_dump(rng, 8192)
-    model = gbdi.fit(data)
+def test_gbdi_size_model_matches_streams(mixed_data, mixed_model32):
+    data, model = mixed_data, mixed_model32
     blob = gbdi.encode(data, model)
     import jax.numpy as jnp
     sizes = gbdi.block_sizes_bits(

@@ -9,11 +9,17 @@ from repro.core.gbdi_fr import (
 )
 from repro.kernels import ops
 
+# interpret-mode Pallas is slow on CPU: the two default-shaped configs run
+# in the tier-1 suite, the off-shape sweep rides the slow lane (--runslow)
 CFGS = [
     FRConfig(),                                                   # bf16 default
-    FRConfig(word_bits=16, page_words=1024, delta_bits=4, outlier_cap=32),
+    pytest.param(
+        FRConfig(word_bits=16, page_words=1024, delta_bits=4, outlier_cap=32),
+        marks=pytest.mark.slow),
     FRConfig(word_bits=32, page_words=1024, delta_bits=16, outlier_cap=64),
-    FRConfig(word_bits=32, page_words=2048, delta_bits=8, num_bases=14, outlier_cap=128),
+    pytest.param(
+        FRConfig(word_bits=32, page_words=2048, delta_bits=8, num_bases=14, outlier_cap=128),
+        marks=pytest.mark.slow),
 ]
 
 

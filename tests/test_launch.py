@@ -7,6 +7,7 @@ import sys
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS, get_config, reduced
 from repro.models.api import build_model
@@ -81,7 +82,10 @@ print("DRYRUN_OK")
     assert "DRYRUN_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-1500:]
 
 
+@pytest.mark.slow
 def test_train_entrypoint_runs(tmp_path):
+    """CLI smoke (fresh-process compile + 6 real steps, ~1 min on CPU);
+    the Trainer itself stays tier-1 via test_substrate."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     r = subprocess.run(
