@@ -12,6 +12,7 @@ from repro.core.gbdi import (  # noqa: F401
     roundtrip_ok,
     to_words,
 )
-from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode  # noqa: F401
+from repro.core.format import BaseTable, as_base_table  # noqa: F401
+from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode  # noqa: F401
 from repro.core import bdi  # noqa: F401
 from repro.core.kmeans import fit_bases, fit_bases_host  # noqa: F401

@@ -1,0 +1,170 @@
+"""Shared GBDI format core: code space, base table, word assignment.
+
+GBDI exists in three embodiments in this repo — the paper-faithful
+bit-granular host codec (:mod:`repro.core.gbdi`), the fixed-rate device
+pages (:mod:`repro.core.gbdi_fr`) and the Pallas TPU kernels
+(:mod:`repro.kernels`).  They historically re-implemented "which base does
+this word use, at which delta width" three ways.  This module is the single
+definition all of them build on:
+
+* the **code space**: ``num_bases`` base pointers plus two reserved codes
+  (all-zero word, outlier) and the pointer width that addresses them;
+* the :class:`BaseTable`: fitted global bases paired with a per-base delta
+  width class — the paper's "maximum deltas" made explicit.  It is a
+  NamedTuple, i.e. a pytree, so it jits/vmaps/ppermutes like any array;
+* :func:`assign`: the per-word assignment (narrowest fitting base, zero
+  and outlier classification) shared by every codec, plus the lower-level
+  :func:`delta_fit` matrices the fixed-rate spill logic builds on.
+
+Everything is pure jnp and jit-able.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import delta_magnitude, wrapped_delta
+
+LANE_BITS = 32
+#: field widths that tile an int32 lane exactly (lane-packable)
+LANE_WIDTHS = (1, 2, 4, 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# code space
+# ---------------------------------------------------------------------------
+
+def ptr_bits(num_bases: int, *, lane_packed: bool = False) -> int:
+    """Pointer width for ``num_bases`` + 2 reserved codes.
+
+    ``lane_packed=True`` rounds up to a width that tiles an int32 lane
+    (the fixed-rate device format); the host codec packs bit-granular and
+    uses the exact width.
+    """
+    need = max(1, math.ceil(math.log2(num_bases + 2)))
+    if not lane_packed:
+        return need
+    for b in LANE_WIDTHS:
+        if b >= need:
+            return b
+    raise ValueError(f"num_bases={num_bases} does not fit a lane-packable pointer")
+
+
+def zero_code(num_bases: int) -> int:
+    return num_bases
+
+
+def outlier_code(num_bases: int) -> int:
+    return num_bases + 1
+
+
+# ---------------------------------------------------------------------------
+# base table
+# ---------------------------------------------------------------------------
+
+class BaseTable(NamedTuple):
+    """Fitted global state: base values and their paired delta widths.
+
+    ``bases``  — (k,) int32 signed views of the word bit patterns;
+    ``widths`` — (k,) int32, each a member of the owning config's
+    ``width_set``.  Being a NamedTuple it is a pytree: it can be closed
+    over by jit, carried inside cache/optimizer state, and shipped through
+    collectives without adapters.
+    """
+
+    bases: jax.Array
+    widths: jax.Array
+
+    @property
+    def num_bases(self) -> int:
+        return self.bases.shape[0]
+
+
+def as_base_table(table, *, default_width: int) -> BaseTable:
+    """Coerce a bare bases array to a :class:`BaseTable` (v1 compat).
+
+    A plain array gets every base paired with ``default_width`` — callers
+    migrating from the single-width v1 API pass the old ``delta_bits``
+    (conventionally the widest class of the config).
+    """
+    if isinstance(table, BaseTable):
+        return table
+    if isinstance(table, (tuple, list)) and len(table) == 2:
+        return BaseTable(jnp.asarray(table[0], jnp.int32), jnp.asarray(table[1], jnp.int32))
+    bases = jnp.asarray(table, jnp.int32)
+    return BaseTable(bases, jnp.full(bases.shape, default_width, jnp.int32))
+
+
+def class_indices(widths: jax.Array, width_set: Sequence[int]) -> jax.Array:
+    """Map per-base widths to indices into ``width_set`` (narrow -> wide).
+
+    A width not in ``width_set`` maps to the sentinel ``len(width_set)`` —
+    codecs treat such bases as dead entries (never assignable) instead of
+    silently mis-bucketing their deltas.  It signals a table fitted under
+    a different config.
+    """
+    idx = jnp.full(widths.shape, len(width_set), jnp.int32)
+    for i, w in enumerate(width_set):
+        idx = jnp.where(widths == jnp.int32(w), jnp.int32(i), idx)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# assignment
+# ---------------------------------------------------------------------------
+
+def delta_fit(values: jax.Array, table: BaseTable, *, word_bits: int):
+    """(n, k) wrapping deltas and the per-base fit mask ``|d| < 2**(w-1)``."""
+    d = wrapped_delta(values, table.bases, word_bits)
+    m = delta_magnitude(d)
+    halfs = jnp.left_shift(jnp.int32(1), table.widths - 1)
+    return d, m < halfs[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("word_bits",))
+def assign(
+    values: jax.Array,       # (n,) int32 word bit patterns
+    bases: jax.Array,        # (k,) int32
+    base_widths: jax.Array,  # (k,) int32
+    *,
+    word_bits: int,
+) -> dict[str, jax.Array]:
+    """Per-word GBDI assignment: code, delta and payload width.
+
+    code in [0, k) selects a base; code == k is the zero word; code == k+1
+    is an outlier (verbatim payload).  Chooses the *narrowest* fitting base
+    (ties broken by argmin order — same width => same encoded size).
+    """
+    k = bases.shape[0]
+    table = BaseTable(bases, base_widths)
+    d, fits = delta_fit(values, table, word_bits=word_bits)
+    cost = jnp.where(fits, base_widths[None, :], jnp.int32(word_bits + 1))
+    best = jnp.argmin(cost, axis=1)
+    best_cost = jnp.take_along_axis(cost, best[:, None], axis=1)[:, 0]
+    best_delta = jnp.take_along_axis(d, best[:, None], axis=1)[:, 0]
+    is_outlier = best_cost > word_bits
+    is_zero = values == 0
+    code = jnp.where(is_outlier, jnp.int32(k + 1), best.astype(jnp.int32))
+    code = jnp.where(is_zero, jnp.int32(k), code)
+    payload_width = jnp.where(is_outlier, jnp.int32(word_bits), best_cost)
+    payload_width = jnp.where(is_zero, jnp.int32(0), payload_width)
+    delta = jnp.where(is_outlier | is_zero, jnp.int32(0), best_delta)
+    return {"code": code, "delta": delta, "payload_width": payload_width}
+
+
+__all__ = [
+    "LANE_BITS",
+    "LANE_WIDTHS",
+    "BaseTable",
+    "as_base_table",
+    "assign",
+    "class_indices",
+    "delta_fit",
+    "outlier_code",
+    "ptr_bits",
+    "zero_code",
+]

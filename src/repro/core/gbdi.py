@@ -14,11 +14,12 @@ Format (per the paper §II / HPCA'22):
   Per-block sizes are also reported (hardware keeps them in translation
   metadata; they are excluded from CR like the paper excludes page tables).
 
-The *assignment* math (codes/deltas/sizes) is pure jnp and jit-able — it is
-shared by the host codec below, the fixed-rate device format
-(:mod:`repro.core.gbdi_fr`) and the Pallas kernel oracle
-(:mod:`repro.kernels.ref`).  The bit-granular pack/unpack runs on host via
-:mod:`repro.core.bitpack` because variable-length output has no static shape.
+The *assignment* math (codes/deltas/sizes) lives in the shared format core
+(:mod:`repro.core.format`) — the same :func:`assign` serves the host codec
+below, the fixed-rate device format (:mod:`repro.core.gbdi_fr`) and the
+Pallas kernel oracle (:mod:`repro.kernels.ref`).  The bit-granular
+pack/unpack runs on host via :mod:`repro.core.bitpack` because
+variable-length output has no static shape.
 """
 from __future__ import annotations
 
@@ -32,7 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitpack
-from repro.core.kmeans import (
+from repro.core import format as fmt
+from repro.core.format import BaseTable, assign  # noqa: F401  (shared core)
+from repro.core.kmeans import (  # noqa: F401  (re-exported via __all__)
     delta_magnitude,
     fit_bases_host,
     width_cost,
@@ -59,15 +62,15 @@ class GBDIConfig:
 
     @property
     def ptr_bits(self) -> int:
-        return max(1, math.ceil(math.log2(self.num_bases + 2)))
+        return fmt.ptr_bits(self.num_bases)
 
     @property
     def zero_code(self) -> int:
-        return self.num_bases
+        return fmt.zero_code(self.num_bases)
 
     @property
     def outlier_code(self) -> int:
-        return self.num_bases + 1
+        return fmt.outlier_code(self.num_bases)
 
     @property
     def table_bits(self) -> int:
@@ -82,42 +85,12 @@ class GBDIModel:
     bases: np.ndarray   # (k,) int32 (signed view of the word bit pattern)
     widths: np.ndarray  # (k,) int32, each from config.width_set
 
+    @property
+    def table(self) -> BaseTable:
+        return BaseTable(jnp.asarray(self.bases), jnp.asarray(self.widths))
 
-# ---------------------------------------------------------------------------
-# jnp assignment core (shared with gbdi_fr / kernels)
-# ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("word_bits",))
-def assign(
-    values: jax.Array,      # (n,) int32 word bit patterns
-    bases: jax.Array,       # (k,) int32
-    base_widths: jax.Array, # (k,) int32
-    *,
-    word_bits: int,
-) -> dict[str, jax.Array]:
-    """Per-word GBDI assignment: code, delta and payload width.
-
-    code in [0, k) selects a base; code == k is the zero word; code == k+1
-    is an outlier (verbatim payload).  Chooses the *narrowest* fitting base
-    (ties broken by argmin order — same width => same encoded size).
-    """
-    k = bases.shape[0]
-    d = wrapped_delta(values, bases, word_bits)             # (n, k)
-    m = delta_magnitude(d)
-    half = (1 << (base_widths - 1)).astype(jnp.int32)       # (k,)
-    fits = m < half[None, :]
-    cost = jnp.where(fits, base_widths[None, :], jnp.int32(word_bits + 1))
-    best = jnp.argmin(cost, axis=1)
-    best_cost = jnp.take_along_axis(cost, best[:, None], axis=1)[:, 0]
-    best_delta = jnp.take_along_axis(d, best[:, None], axis=1)[:, 0]
-    is_outlier = best_cost > word_bits
-    is_zero = values == 0
-    code = jnp.where(is_outlier, jnp.int32(k + 1), best.astype(jnp.int32))
-    code = jnp.where(is_zero, jnp.int32(k), code)
-    payload_width = jnp.where(is_outlier, jnp.int32(word_bits), best_cost)
-    payload_width = jnp.where(is_zero, jnp.int32(0), payload_width)
-    delta = jnp.where(is_outlier | is_zero, jnp.int32(0), best_delta)
-    return {"code": code, "delta": delta, "payload_width": payload_width}
+# assignment core: shared with gbdi_fr / kernels — see repro.core.format.assign
 
 
 @functools.partial(jax.jit, static_argnames=("word_bits", "block_words", "ptr_bits"))
@@ -269,6 +242,7 @@ def roundtrip_ok(data: np.ndarray | bytes, model: GBDIModel) -> bool:
 
 
 __all__ = [
+    "BaseTable",
     "GBDIConfig",
     "GBDIModel",
     "assign",

@@ -1,21 +1,56 @@
-"""GBDI-FR — fixed-rate TPU page format (device regime of the paper's idea).
+"""GBDI-FR v2 — multi-width fixed-rate TPU page format.
 
 Inside a jitted program every buffer is static-shaped, so the paper's
 variable-length bit stream cannot shrink a device buffer.  GBDI-FR keeps the
 paper's core insight — global bases + narrow deltas + explicit outliers —
-but re-tiles it into a fixed-rate page so it can live in HBM, be sharded by
-pjit, and be produced/consumed by a Pallas kernel:
+and re-tiles it into a fixed-rate page.  v2 restores the paper's *second*
+insight, that deltas within the same block vary in size: each global base
+carries a width class from ``width_set`` and deltas are stored at their
+base's width, not one page-wide rate.
 
-* a page is ``page_words`` words; every word stores a ``ptr_bits`` pointer
-  and a ``delta_bits`` two's-complement delta, lane-packed into int32 lanes;
-* a fixed-capacity outlier table (``outlier_cap`` slots of full words +
-  positions) holds the words that fit no base — the paper's outlier class
-  with a hardware-friendly bound;
-* pages are **capacity-bounded lossless**: bit-exact whenever a page has at
-  most ``outlier_cap`` outliers.  Overflowing words are deterministically
-  re-coded as nearest-base + clamped delta at *encode* time (so decode is
-  always well defined); the drop count is reported and is ~0 for the
-  gradient/KV distributions this path serves (measured in benchmarks).
+v2 page layout (all shapes static, derived from :class:`FRConfig`)::
+
+  ptrs     (ptr_lanes,)   one ``ptr_bits`` code per word: base index,
+                          zero code, or outlier code, lane-packed
+  deltas   (delta_lanes,) per-width-class sub-streams, concatenated in
+                          width_set order.  Class i holds up to
+                          ``bucket_caps[i]`` two's-complement deltas of
+                          ``width_set[i]`` bits, compacted in page order
+                          (zeros and outliers consume no payload)
+  out_vals/out_idx (outlier_cap,) + n_out  fixed-capacity outlier table
+  n_spilled / n_dropped   per-page diagnostics (see spill rules)
+
+Sub-stream positions carry no side metadata: a word's slot in its class is
+its page-order rank among same-class words, which the decoder recomputes
+from the codes with the same prefix sum the encoder used.
+
+Spill rules (deterministic, narrow -> wide):
+
+1. every non-zero word takes the *narrowest* base whose width holds its
+   wrapping delta;
+2. if its class bucket is full (page-order rank >= ``bucket_caps[i]``), it
+   re-codes to the narrowest *fitting* base of a strictly wider class
+   (counted in ``n_spilled``; still bit-exact — the delta is just wider);
+3. if no wider base fits (or buckets are exhausted), it goes to the
+   outlier table (verbatim word);
+4. if the outlier table is full, the word is **dropped**: it keeps the
+   outlier code with no table slot and decodes to 0, counted in
+   ``n_dropped``.
+
+Pages are therefore **capacity-bounded lossless**: bit-exact whenever no
+bucket chain overflows past the outlier table.  The drop count is reported
+and is ~0 for the gradient/KV distributions this path serves.
+
+Migration note (v1 -> v2): v1 blobs stored one page-positional delta
+stream at a single ``delta_bits`` rate — every word, including zeros and
+outliers, paid ``delta_bits``.  v2 blobs are not bit-compatible: the delta
+payload is bucketed + compacted, dropped words decode to 0 instead of a
+clamped nearest-base value, and ``fr_encode``/``fr_decode`` take a
+:class:`repro.core.format.BaseTable` (bases + per-base widths) where v1
+took a bare bases array.  ``FRConfig(delta_bits=w)`` still constructs the
+single-width special case (``width_set=(w,)``, one full-page bucket), and a
+bare bases array passed where a table is expected is interpreted as
+"every base at the widest class".
 
 This module is the pure-jnp oracle for the Pallas kernels in
 :mod:`repro.kernels` — the kernels must match it bit-for-bit.
@@ -24,12 +59,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeans import delta_magnitude, wrapped_delta
+from repro.core import format as fmt
+from repro.core.format import BaseTable, as_base_table
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,47 +73,88 @@ class FRConfig:
 
     bf16 words have a 7-bit mantissa, so one global base per hot
     (sign, exponent) bucket plus 8-bit deltas covers a full bucket —
-    k-means finds exactly those buckets.  fp32 *noise* mantissas (23
-    uniform bits) cannot be covered by narrow bit-pattern deltas at a
-    useful rate (measured in benchmarks); fp32 paths should transport
-    in bf16 (standard for gradients) or use the host variable-length
-    codec where zeros/ints/pointers dominate (checkpoints, dumps).
+    k-means finds exactly those buckets, and pairs tight clusters with the
+    4-bit class.  The default bucket capacities are sized from measured
+    per-page class demand on the ML families (``repro.eval.run --sweep``
+    regenerates the Pareto): zeros and outliers no longer consume payload,
+    which is where v2 lands below v1's 12-bits/word fixed rate.  fp32
+    *noise* mantissas (23 uniform bits) cannot be covered by narrow
+    bit-pattern deltas at a useful rate; fp32 paths should transport in
+    bf16 (standard for gradients) or use the host variable-length codec.
     """
-    word_bits: int = 16        # 16 for bf16 views, 32 for fp32/int32 views
+    word_bits: int = 16            # 16 for bf16 views, 32 for fp32/int32 views
     page_words: int = 2048
-    num_bases: int = 14        # +zero+outlier -> 16 codes -> 4-bit pointers
-    delta_bits: int = 8        # lane-packable: one of 4, 8, 16
-    outlier_cap: int = 64      # full-width slots per page (3.1% of 2048)
+    num_bases: int = 14            # +zero+outlier -> 16 codes -> 4-bit pointers
+    width_set: tuple[int, ...] = (4, 8)   # lane-packable, ascending, < word_bits
+    bucket_caps: tuple[int, ...] = (192, 1856)  # per-page words per width class
+    outlier_cap: int = 64          # full-width slots per page (3.1% of 2048)
+    # v1 compat: FRConfig(delta_bits=w) == single-width v2 with one
+    # full-page bucket (width_set=(w,), bucket_caps=(page_words,)).
+    delta_bits: dataclasses.InitVar[int | None] = None
 
-    def __post_init__(self):
+    def __post_init__(self, delta_bits: int | None):
+        if delta_bits is not None:
+            object.__setattr__(self, "width_set", (int(delta_bits),))
+            object.__setattr__(self, "bucket_caps", (self.page_words,))
+        ws, caps = self.width_set, self.bucket_caps
         if self.word_bits not in (16, 32):
             raise ValueError("word_bits must be 16 or 32")
-        if 32 % self.delta_bits or self.delta_bits >= self.word_bits:
-            raise ValueError("delta_bits must divide 32 and be < word_bits")
-        if 32 % self.ptr_bits:
-            raise ValueError("num_bases+2 must pack into int32 lanes")
+        if not ws or list(ws) != sorted(set(ws)):
+            raise ValueError("width_set must be non-empty, ascending, unique")
+        for w in ws:
+            if 32 % w or w >= self.word_bits:
+                raise ValueError("each width must divide 32 and be < word_bits")
+        if len(caps) != len(ws):
+            raise ValueError("bucket_caps must pair width_set one-to-one")
+        for w, cap in zip(ws, caps):
+            if not 0 <= cap <= self.page_words:
+                raise ValueError("bucket_caps must be in [0, page_words]")
+            if cap * w % 32:
+                raise ValueError(f"bucket cap {cap} x width {w} must fill int32 lanes")
         if self.page_words % 128:
             raise ValueError("page_words must be lane-aligned (multiple of 128)")
+        if self.num_bases + 2 > (1 << 16):
+            raise ValueError("num_bases does not fit a lane-packable pointer")
+
+    @property
+    def num_classes(self) -> int:
+        return len(self.width_set)
+
+    @property
+    def widest_bits(self) -> int:
+        return self.width_set[-1]
 
     @property
     def ptr_bits(self) -> int:
-        return max(1, math.ceil(math.log2(self.num_bases + 2)))
+        return fmt.ptr_bits(self.num_bases, lane_packed=True)
 
     @property
     def zero_code(self) -> int:
-        return self.num_bases
+        return fmt.zero_code(self.num_bases)
 
     @property
     def outlier_code(self) -> int:
-        return self.num_bases + 1
+        return fmt.outlier_code(self.num_bases)
 
     @property
     def ptr_lanes(self) -> int:
         return self.page_words * self.ptr_bits // 32
 
     @property
+    def class_lanes(self) -> tuple[int, ...]:
+        return tuple(cap * w // 32 for w, cap in zip(self.width_set, self.bucket_caps))
+
+    @property
+    def class_lane_offsets(self) -> tuple[int, ...]:
+        offs, off = [], 0
+        for lanes in self.class_lanes:
+            offs.append(off)
+            off += lanes
+        return tuple(offs)
+
+    @property
     def delta_lanes(self) -> int:
-        return self.page_words * self.delta_bits // 32
+        return sum(self.class_lanes)
 
     def compressed_bytes_per_page(self) -> int:
         # ptr lanes + delta lanes + outlier values + outlier positions + count
@@ -88,6 +164,9 @@ class FRConfig:
 
     def ratio(self) -> float:
         return (self.page_words * self.word_bits / 8) / self.compressed_bytes_per_page()
+
+    def bits_per_word(self) -> float:
+        return self.compressed_bytes_per_page() * 8 / self.page_words
 
 
 # ---------------------------------------------------------------------------
@@ -114,57 +193,90 @@ def unpack_lanes(p: jax.Array, bits: int, n: int) -> jax.Array:
 # single-page encode/decode (vmapped below)
 # ---------------------------------------------------------------------------
 
-def _encode_page(x: jax.Array, bases: jax.Array, cfg: FRConfig) -> dict[str, jax.Array]:
-    P, cap, wb = cfg.page_words, cfg.outlier_cap, cfg.word_bits
-    d = wrapped_delta(x, bases, wb)                      # (P, k)
-    m = delta_magnitude(d)
-    half = 1 << (cfg.delta_bits - 1)
-    fits = m < half
-    nearest = jnp.argmin(m, axis=1)                      # for clamped fallback
-    mk = jnp.where(fits, m, jnp.int32(2**31 - 1))
-    best = jnp.argmin(mk, axis=1)
-    any_fit = fits[jnp.arange(P), best]
+def _encode_page(x: jax.Array, table: BaseTable, cfg: FRConfig) -> dict[str, jax.Array]:
+    P, cap_out, wb = cfg.page_words, cfg.outlier_cap, cfg.word_bits
+    cls = fmt.class_indices(table.widths, cfg.width_set)       # (k,)
+    known = cls < cfg.num_classes       # bases with a width outside the
+    d, fits = fmt.delta_fit(x, table, word_bits=wb)            # (P, k)
+    BIG = jnp.int32(wb + 1)             # config's width_set are dead entries
+    cost = jnp.where(fits & known[None, :], table.widths[None, :], BIG)
+    sel = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    found = jnp.take_along_axis(cost, sel[:, None], axis=1)[:, 0] <= wb
     is_zero = x == 0
-    is_out = (~any_fit) & (~is_zero)
+    active = found & ~is_zero
+    out_cand = (~found) & (~is_zero)
 
-    # outlier compaction: page-order slots, overflow re-coded as clamped delta
-    pos = jnp.cumsum(is_out.astype(jnp.int32)) - 1
-    in_table = is_out & (pos < cap)
-    dropped = is_out & ~in_table
-    slot = jnp.where(in_table, pos, cap)                 # cap = scratch slot
-    out_vals = jnp.zeros(cap + 1, jnp.int32).at[slot].set(jnp.where(in_table, x, 0))[:cap]
-    out_idx = jnp.zeros(cap + 1, jnp.int32).at[slot].set(
+    # narrow -> wide bucketing with page-order compaction; bucket overflow
+    # re-codes to the narrowest fitting wider-class base, else outlier
+    subs, n_spilled = [], jnp.int32(0)
+    for i, (w, cap) in enumerate(zip(cfg.width_set, cfg.bucket_caps)):
+        inclass = active & (cls[sel] == i)
+        rank = jnp.cumsum(inclass.astype(jnp.int32)) - 1
+        keep = inclass & (rank < cap)
+        over = inclass & ~keep
+        delta = jnp.take_along_axis(d, sel[:, None], axis=1)[:, 0]
+        payload = jnp.where(keep, delta, 0).astype(jnp.uint32) & jnp.uint32((1 << w) - 1)
+        slot = jnp.where(keep, rank, cap)                       # cap = scratch slot
+        sub = jnp.zeros(cap + 1, jnp.uint32).at[slot].set(
+            jnp.where(keep, payload, 0))[:cap]
+        subs.append(pack_lanes(sub, w))
+        wcost = jnp.where((cls[None, :] > i) & known[None, :], cost, BIG)
+        alt = jnp.argmin(wcost, axis=1).astype(jnp.int32)
+        alt_ok = jnp.take_along_axis(wcost, alt[:, None], axis=1)[:, 0] <= wb
+        sel = jnp.where(over & alt_ok, alt, sel)
+        n_spilled = n_spilled + (over & alt_ok).sum(dtype=jnp.int32)
+        newly_out = over & ~alt_ok
+        active = active & ~newly_out
+        out_cand = out_cand | newly_out
+
+    # outlier compaction: page-order slots; overflow keeps the outlier code
+    # with no slot (decodes to 0) and is counted as dropped
+    pos = jnp.cumsum(out_cand.astype(jnp.int32)) - 1
+    in_table = out_cand & (pos < cap_out)
+    dropped = out_cand & ~in_table
+    slot = jnp.where(in_table, pos, cap_out)
+    out_vals = jnp.zeros(cap_out + 1, jnp.int32).at[slot].set(jnp.where(in_table, x, 0))[:cap_out]
+    out_idx = jnp.zeros(cap_out + 1, jnp.int32).at[slot].set(
         jnp.where(in_table, jnp.arange(P, dtype=jnp.int32), 0)
-    )[:cap]
-    n_out = jnp.minimum(is_out.sum(dtype=jnp.int32), cap)
+    )[:cap_out]
 
-    base_sel = jnp.where(dropped, nearest, best)
-    delta = jnp.take_along_axis(d, base_sel[:, None], axis=1)[:, 0]
-    delta = jnp.clip(delta, -half, half - 1)             # exact when it fits
-    code = jnp.where(is_zero, jnp.int32(cfg.zero_code), base_sel.astype(jnp.int32))
-    code = jnp.where(in_table, jnp.int32(cfg.outlier_code), code)
-    payload = jnp.where(
-        (code == cfg.zero_code) | (code == cfg.outlier_code), 0, delta
-    ).astype(jnp.uint32) & jnp.uint32((1 << cfg.delta_bits) - 1)
-
+    code = jnp.where(is_zero, jnp.int32(cfg.zero_code), sel)
+    code = jnp.where(out_cand, jnp.int32(cfg.outlier_code), code)
     return {
         "ptrs": pack_lanes(code.astype(jnp.uint32), cfg.ptr_bits),
-        "deltas": pack_lanes(payload, cfg.delta_bits),
+        "deltas": jnp.concatenate(subs) if subs else jnp.zeros((0,), jnp.int32),
         "out_vals": out_vals,
         "out_idx": out_idx,
-        "n_out": n_out,
+        "n_out": jnp.minimum(out_cand.sum(dtype=jnp.int32), cap_out),
+        "n_spilled": n_spilled,
         "n_dropped": dropped.sum(dtype=jnp.int32),
     }
 
 
-def _decode_page(blob: dict[str, jax.Array], bases: jax.Array, cfg: FRConfig) -> jax.Array:
+def _decode_page(blob: dict[str, jax.Array], table: BaseTable, cfg: FRConfig) -> jax.Array:
     P, wb = cfg.page_words, cfg.word_bits
+    cls = fmt.class_indices(table.widths, cfg.width_set)
     code = unpack_lanes(blob["ptrs"], cfg.ptr_bits, P).astype(jnp.int32)
-    raw = unpack_lanes(blob["deltas"], cfg.delta_bits, P).astype(jnp.int32)
-    half = 1 << (cfg.delta_bits - 1)
-    delta = jnp.where(raw >= half, raw - (1 << cfg.delta_bits), raw)
+    active = code < cfg.num_bases
     base_code = jnp.clip(code, 0, cfg.num_bases - 1)
-    val = bases[base_code] + delta
+    cls_w = cls[base_code]
+
+    # per-class sub-stream gather: a word's slot is its page-order rank
+    # among same-class words — the encoder's prefix sum, recomputed
+    delta = jnp.zeros(P, jnp.int32)
+    for i, (w, cap, off) in enumerate(
+        zip(cfg.width_set, cfg.bucket_caps, cfg.class_lane_offsets)
+    ):
+        if cap == 0:
+            continue
+        sub = unpack_lanes(blob["deltas"][off:off + cap * w // 32], w, cap).astype(jnp.int32)
+        half = 1 << (w - 1)
+        sub = jnp.where(sub >= half, sub - (1 << w), sub)
+        inclass = active & (cls_w == i)
+        rank = jnp.cumsum(inclass.astype(jnp.int32)) - 1
+        delta = jnp.where(inclass, sub[jnp.clip(rank, 0, cap - 1)], delta)
+
+    val = table.bases[base_code] + delta
     if wb == 16:
         val = val & 0xFFFF
     val = jnp.where(code == cfg.zero_code, 0, val)
@@ -177,14 +289,16 @@ def _decode_page(blob: dict[str, jax.Array], bases: jax.Array, cfg: FRConfig) ->
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def fr_encode(x: jax.Array, bases: jax.Array, cfg: FRConfig) -> dict[str, jax.Array]:
+def fr_encode(x: jax.Array, table, cfg: FRConfig) -> dict[str, jax.Array]:
     """Encode (n_pages, page_words) int32 word pages. Pure jnp oracle."""
-    return jax.vmap(lambda p: _encode_page(p, bases, cfg))(x)
+    table = as_base_table(table, default_width=cfg.widest_bits)
+    return jax.vmap(lambda p: _encode_page(p, table, cfg))(x)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def fr_decode(blob: dict[str, jax.Array], bases: jax.Array, cfg: FRConfig) -> jax.Array:
-    return jax.vmap(lambda b: _decode_page(b, bases, cfg))(blob)
+def fr_decode(blob: dict[str, jax.Array], table, cfg: FRConfig) -> jax.Array:
+    table = as_base_table(table, default_width=cfg.widest_bits)
+    return jax.vmap(lambda b: _decode_page(b, table, cfg))(blob)
 
 
 # ---------------------------------------------------------------------------
@@ -222,17 +336,39 @@ def pages_to_tensor(words: jax.Array, meta: dict, cfg: FRConfig) -> jax.Array:
     return out.reshape(meta["shape"])
 
 
-def fit_fr_bases(sample_words: jax.Array, cfg: FRConfig, iters: int = 8) -> jax.Array:
-    """Refit FR bases from live tensor words (the trainer/serving hook)."""
+def fit_fr_bases(
+    sample_words: jax.Array, cfg: FRConfig, iters: int = 8,
+    sample_cap: int = 1 << 16,
+) -> BaseTable:
+    """Refit the FR base table from live tensor words (trainer/serving hook).
+
+    v2: the modified k-means pairs every base with the width class from
+    ``cfg.width_set`` that minimises its cluster's encoded bits — the
+    returned :class:`BaseTable` carries both.
+
+    Outside a trace, zero words are pre-filtered (they are free via the
+    zero code; the k-means contract expects them gone) and the sample is
+    capped at ``sample_cap`` then tiled up to a power of two so the jitted
+    fit compiles O(log n) variants, not one per caller shape.  Under jit
+    the sample is used as-is (shapes are static there anyway).
+    """
+    import numpy as np
+
     from repro.core.kmeans import fit_bases
 
     flat = sample_words.reshape(-1)
-    bases, _ = fit_bases(
+    if not isinstance(flat, jax.core.Tracer):
+        nz = np.asarray(flat).reshape(-1)
+        nz = nz[nz != 0][:sample_cap]
+        if nz.size:
+            flat = jnp.asarray(np.resize(nz, 1 << (nz.size - 1).bit_length()),
+                               jnp.int32)
+    bases, widths = fit_bases(
         flat,
         num_bases=cfg.num_bases,
-        width_set=(cfg.delta_bits,),
+        width_set=cfg.width_set,
         word_bits=cfg.word_bits,
         iters=iters,
         modified=True,
     )
-    return bases
+    return BaseTable(bases, widths)

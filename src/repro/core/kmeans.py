@@ -9,6 +9,11 @@ size, which the paper reports beats vanilla k-means on compression ratio.
 
 Everything here is pure jnp and jit-able so the same code serves both the
 offline fit (paper-faithful) and the trainer's periodic base-refit hook.
+``fit_bases`` returns *paired* (bases, widths): every base carries the
+width class from ``width_set`` that minimises its cluster's encoded bits.
+Callers consume the pair as a :class:`repro.core.format.BaseTable` — the
+GBDI-FR v2 page format keys its per-width-class delta sub-streams off
+exactly these per-base classes, so the fit decides the device layout.
 
 Precision note: centroid updates are computed as ``base + mean(fitting
 deltas)``.  Fitting deltas are bounded by the widest class (< 2**23 for the

@@ -25,9 +25,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.format import BaseTable
 from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
 
-GRAD_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14, delta_bits=8, outlier_cap=64)
+# Gradients are quality-critical: one 8-bit class with a full-page bucket
+# (the v2 single-width special case) — bucket overflow cannot occur, so
+# in-capacity losslessness matches v1 at identical wire bytes.  Outlier-
+# table overflow still drops words (>64 no-fit words/page); v2 drops
+# decode to 0 where v1 decoded a clamped nearest-base value — both are
+# wrong in float space, and `blob['n_dropped']` reports either.  Tables
+# must be fitted under THIS config (see trainer._refit_fr).
+GRAD_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14,
+                   width_set=(8,), bucket_caps=(2048,), outlier_cap=64)
 
 
 def pod_shard_map(f, mesh, in_specs, out_specs, *, manual_axes=("pod",)):
@@ -54,25 +63,25 @@ def pod_shard_map(f, mesh, in_specs, out_specs, *, manual_axes=("pod",)):
     )
 
 
-def _encode_leaf(g: jax.Array, bases):
+def _encode_leaf(g: jax.Array, table: BaseTable):
     flat = g.astype(jnp.bfloat16).reshape(-1)
     words = jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.int32)
     pad = (-words.shape[0]) % GRAD_FR.page_words
     words = jnp.pad(words, (0, pad))
-    return fr_encode(words.reshape(-1, GRAD_FR.page_words), bases, GRAD_FR)
+    return fr_encode(words.reshape(-1, GRAD_FR.page_words), table, GRAD_FR)
 
 
-def _decode_leaf(blob, bases, n, shape, dtype):
-    words = fr_decode(blob, bases, GRAD_FR).reshape(-1)[:n]
+def _decode_leaf(blob, table: BaseTable, n, shape, dtype):
+    words = fr_decode(blob, table, GRAD_FR).reshape(-1)[:n]
     flat = jax.lax.bitcast_convert_type(words.astype(jnp.uint16), jnp.bfloat16)
     return flat.astype(dtype).reshape(shape)
 
 
-def compressed_pod_mean(grads, bases, *, axis_name: str = "pod", n_pods: int = 2):
+def compressed_pod_mean(grads, table: BaseTable, *, axis_name: str = "pod", n_pods: int = 2):
     """Inside shard_map(manual over ``pod``): ring-exchange compressed grads,
     return the cross-pod mean.  Exact for in-capacity pages (bf16 transport)."""
     acc = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-    blobs = jax.tree.map(lambda g: _encode_leaf(g, bases), grads,
+    blobs = jax.tree.map(lambda g: _encode_leaf(g, table), grads,
                          is_leaf=lambda x: hasattr(x, "shape"))
     perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
     cur = blobs
@@ -80,7 +89,7 @@ def compressed_pod_mean(grads, bases, *, axis_name: str = "pod", n_pods: int = 2
         cur = jax.tree.map(lambda b: jax.lax.ppermute(b, axis_name, perm), cur)
         decoded = jax.tree.map(
             lambda g, blob: _decode_leaf(
-                blob, bases, g.size, g.shape, jnp.float32
+                blob, table, g.size, g.shape, jnp.float32
             ),
             grads, cur,
             is_leaf=lambda x: hasattr(x, "shape"),
@@ -93,7 +102,7 @@ def plain_pod_mean(grads, *, axis_name: str = "pod"):
     return jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
 
 
-def compressed_crosspod_mean(grads, bases):
+def compressed_crosspod_mean(grads, table: BaseTable):
     """Convenience wrapper used when train_step already runs under a
     pod-manual shard_map; no-op when there is no pod axis."""
-    return compressed_pod_mean(grads, bases)
+    return compressed_pod_mean(grads, table)

@@ -3,6 +3,8 @@
   PYTHONPATH=src python -m repro.eval.run --suite all --codec gbdi,bdi,fr
   PYTHONPATH=src python -m repro.eval.run --suite ml,column --codec gbdi \
       --bytes 262144 --json experiments/BENCH_eval.json
+  PYTHONPATH=src python -m repro.eval.run --sweep --suite ml \
+      --json experiments/BENCH_sweep.json
 
 Per cell the runner fits, encodes, decodes, **verifies the roundtrip**
 (bit-exact for lossless codecs; for the fixed-rate codec, mismatching
@@ -10,6 +12,11 @@ words must not exceed the reported dropped-outlier count), and records
 CR / bits-per-word / encode throughput.  Output is an aligned stdout
 table, ``name,us_per_call,derived`` CSV lines matching the ``benchmarks/``
 convention, and a ``BENCH_*.json``-style artifact.
+
+``--sweep`` walks a num_bases x width_set/bucket_caps grid of GBDI-FR v2
+configs over the selected suite and emits a Pareto table (geomean CR vs
+encode MB/s, Pareto-optimal rows marked) plus a ``BENCH_sweep.json``
+artifact — replacing the ad-hoc benchmark loops the ROADMAP called out.
 """
 from __future__ import annotations
 
@@ -115,6 +122,101 @@ def evaluate(
 
 
 # ---------------------------------------------------------------------------
+# config sweep (num_bases x width_set/bucket_caps Pareto)
+# ---------------------------------------------------------------------------
+
+#: per-word-size (width_set, bucket_caps) grid points; widths scale with the
+#: word so 16- and 32-bit streams sweep comparable shapes
+SWEEP_SHAPES = {
+    16: [
+        ((8,), (2048,)),                       # v1-equivalent single width
+        ((4, 8), (192, 1856)),                 # v2 default
+        ((4, 8), (128, 1536)),                 # tighter buckets
+        ((2, 4, 8), (128, 256, 1664)),         # three classes
+    ],
+    32: [
+        ((16,), (2048,)),
+        ((8, 16), (192, 1856)),
+        ((8, 16), (128, 1536)),
+        ((4, 8, 16), (128, 256, 1664)),
+    ],
+}
+SWEEP_NUM_BASES = (6, 14, 30)
+
+
+def sweep(
+    workload_registry: WorkloadRegistry,
+    *,
+    suite: str = "ml",
+    backend: str = "ref",
+    n_bytes: int = 1 << 18,
+    seed: int = 0,
+    verify: bool = True,
+) -> list[dict]:
+    """Evaluate the FR codec across the config grid; one row per config."""
+    from repro.core.gbdi_fr import FRConfig
+    from repro.eval.codecs import FRCodec
+
+    workloads = workload_registry.select(suite)
+    rows: list[dict] = []
+    for num_bases in SWEEP_NUM_BASES:
+        for shape_idx in range(len(SWEEP_SHAPES[16])):
+            cells = []
+            width_sets: dict[int, tuple[int, ...]] = {}
+            for wl in workloads:
+                width_set, caps = SWEEP_SHAPES[wl.word_bits][shape_idx]
+                width_sets[wl.word_bits] = width_set
+                cfg = FRConfig(word_bits=wl.word_bits, num_bases=num_bases,
+                               width_set=width_set, bucket_caps=caps)
+                codec = FRCodec(
+                    word_bits=wl.word_bits, backend=backend, cfg=cfg,
+                    name=f"fr[k{num_bases}/w{'-'.join(map(str, width_set))}]",
+                )
+                data = wl.generate(n_bytes, seed)
+                cells.append(evaluate_cell(wl, codec, data, verify=verify))
+            # one label per word size actually evaluated — a mixed suite
+            # sweeps paired shapes, e.g. "k14/w4-8|w8-16"
+            label = f"k{num_bases}/" + "|".join(
+                f"w{'-'.join(map(str, ws))}"
+                for _, ws in sorted(width_sets.items())
+            )
+            rows.append({
+                "config": label,
+                "num_bases": num_bases,
+                "shape_idx": shape_idx,
+                "width_sets": {str(wb): list(ws) for wb, ws in sorted(width_sets.items())},
+                "backend": backend,
+                "geomean_cr": geomean(c.compression_ratio for c in cells),
+                "bits_per_word": float(np.mean([c.bits_per_word for c in cells])),
+                "encode_mb_s": float(np.mean([c.encode_mb_s for c in cells])),
+                "exact_frac": float(np.mean([c.exact_frac for c in cells])),
+                "verified": all(c.verified for c in cells),
+                "cells": [c.to_json() for c in cells],
+            })
+    # Pareto front on (geomean CR up, encode MB/s up)
+    for r in rows:
+        r["pareto"] = not any(
+            o["geomean_cr"] >= r["geomean_cr"] and o["encode_mb_s"] >= r["encode_mb_s"]
+            and (o["geomean_cr"] > r["geomean_cr"] or o["encode_mb_s"] > r["encode_mb_s"])
+            for o in rows
+        )
+    return rows
+
+
+def format_sweep_table(rows: list[dict]) -> str:
+    hdr = f"{'config':<18} {'CR(geo)':>8} {'bits/w':>7} {'enc MB/s':>9} " \
+          f"{'exact':>7} {'ok':>3} {'pareto':>6}"
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: -r["geomean_cr"]):
+        lines.append(
+            f"{r['config']:<18} {r['geomean_cr']:>8.3f} {r['bits_per_word']:>7.2f} "
+            f"{r['encode_mb_s']:>9.1f} {r['exact_frac']:>7.4f} "
+            f"{'yes' if r['verified'] else 'NO':>3} {'*' if r['pareto'] else '':>6}"
+        )
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
 # reporting
 # ---------------------------------------------------------------------------
 
@@ -182,8 +284,10 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
     ap.add_argument("--suite", default="all",
                     help="'all', or comma list of kinds (c,java,column,ml) "
                          "and/or workload names")
-    ap.add_argument("--codec", default="gbdi,bdi,fr",
-                    help="comma list from: gbdi, bdi, fr, fr_kernel")
+    ap.add_argument("--codec", default=None,
+                    help="comma list from: gbdi, bdi, fr, fr_kernel "
+                         "(fr_kernel interprets the Pallas kernels on CPU). "
+                         "Default: all four; for --sweep: fr (jnp oracle)")
     ap.add_argument("--bytes", type=int, default=1 << 20, dest="n_bytes",
                     help="stream size per workload (default 1 MiB)")
     ap.add_argument("--seed", type=int, default=0)
@@ -191,13 +295,40 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
     ap.add_argument("--json", default="", help="write BENCH_*.json artifact here")
     ap.add_argument("--csv", action="store_true",
                     help="also print benchmarks/-style CSV lines")
+    ap.add_argument("--sweep", action="store_true",
+                    help="sweep num_bases x width_set FR configs; Pareto "
+                         "table + BENCH_sweep.json instead of per-codec cells")
     args = ap.parse_args(argv)
+
+    if args.sweep:
+        # kernel backend only on explicit request: interpret-mode Pallas is
+        # orders of magnitude slower and its MB/s is not a CPU datapoint
+        backend = "kernel" if args.codec and "fr_kernel" in args.codec else "ref"
+        try:
+            rows = sweep(default_workloads(), suite=args.suite, backend=backend,
+                         n_bytes=args.n_bytes, seed=args.seed,
+                         verify=not args.no_verify)
+        except KeyError as e:
+            raise SystemExit(f"error: {e.args[0] if e.args else e}")
+        print(format_sweep_table(rows))
+        if args.json:
+            from pathlib import Path
+
+            p = Path(args.json)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(json.dumps({
+                "bench": "sweep", "suite": args.suite, "backend": backend,
+                "n_bytes": args.n_bytes, "seed": args.seed,
+                "rows": rows,
+            }, indent=2))
+            print(f"wrote {p}")
+        return []
 
     try:
         cells = evaluate(
             default_workloads(), default_codecs(),
-            suite=args.suite, codecs=args.codec, n_bytes=args.n_bytes,
-            seed=args.seed, verify=not args.no_verify,
+            suite=args.suite, codecs=args.codec or "gbdi,bdi,fr,fr_kernel",
+            n_bytes=args.n_bytes, seed=args.seed, verify=not args.no_verify,
         )
     except KeyError as e:  # unknown suite/workload/codec: clean CLI error
         raise SystemExit(f"error: {e.args[0] if e.args else e}")
@@ -211,7 +342,8 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
         p = Path(args.json)
         p.parent.mkdir(parents=True, exist_ok=True)
         p.write_text(json.dumps(
-            to_artifact(cells, suite=args.suite, codecs=args.codec,
+            to_artifact(cells, suite=args.suite,
+                        codecs=args.codec or "gbdi,bdi,fr,fr_kernel",
                         n_bytes=args.n_bytes, seed=args.seed), indent=2))
         print(f"wrote {p}")
     bad = [c for c in cells if not c.verified]

@@ -1,9 +1,11 @@
-"""Pallas TPU kernel: GBDI-FR page decode.
+"""Pallas TPU kernel: GBDI-FR v2 page decode.
 
-Decode is the paper's "value reconstruction" engine (§IV.B): global-table
-lookup + delta add + outlier scatter-back.  On TPU the table lookup is a
-one-hot integer multiply-reduce (k is tiny) and the outlier scatter is the
-transpose of the encoder's compaction one-hot — no dynamic gather/scatter.
+Decode is the paper's "value reconstruction" engine: global-table lookup +
+delta add + outlier scatter-back.  On TPU the table lookup is a one-hot
+integer multiply-reduce (k is tiny), the per-width-class sub-stream gather
+recomputes the encoder's page-order prefix ranks and reads slots through
+chunked one-hot reduces, and the outlier scatter is the transpose of the
+encoder's compaction one-hot — no dynamic gather/scatter anywhere.
 """
 from __future__ import annotations
 
@@ -14,16 +16,35 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.gbdi_fr import FRConfig
-from repro.kernels.gbdi_encode import DEFAULT_PAGES_PER_TILE
+from repro.kernels.gbdi_encode import (
+    DEFAULT_PAGES_PER_TILE,
+    SLOT_CHUNK,
+    _check_vmem,
+    _cumsum_lanes,
+    k_padded,
+    pad_table,
+)
+
+
+def _gather_chunks(rank, inclass, sub, cap: int):
+    """``sub[:, rank]`` where ``inclass`` via chunked one-hot reduce."""
+    out = jnp.zeros(rank.shape, jnp.int32)
+    for c0 in range(0, cap, SLOT_CHUNK):
+        n = min(SLOT_CHUNK, cap - c0)
+        slots = jnp.arange(n, dtype=jnp.int32) + jnp.int32(c0)  # iota, not a const
+        oh = ((rank[:, :, None] == slots[None, None, :]) & inclass[:, :, None]).astype(jnp.int32)
+        out = out + (oh * sub[:, None, c0:c0 + n]).sum(axis=2)
+    return out
 
 
 def _decode_kernel(
-    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, bases_ref, x_ref,
+    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, bases_ref, cls_ref, x_ref,
     *, cfg: FRConfig, k_pad: int,
 ):
     T, P = x_ref.shape
-    cap, db, wb = cfg.outlier_cap, cfg.delta_bits, cfg.word_bits
+    cap_out, wb = cfg.outlier_cap, cfg.word_bits
     bases = bases_ref[...][0]                              # (k_pad,)
+    cls = cls_ref[...][0]
 
     def unpack(p, bits, n):
         per = 32 // bits
@@ -32,20 +53,35 @@ def _decode_kernel(
         return fields.reshape(T, -1)[:, :n]
 
     code = unpack(ptr_ref[...], cfg.ptr_bits, P).astype(jnp.int32)
-    raw = unpack(delta_ref[...], db, P).astype(jnp.int32)
-    half = 1 << (db - 1)
-    delta = jnp.where(raw >= half, raw - (1 << db), raw)
-
-    # base lookup as one-hot integer reduce (k_pad is tiny)
+    active = code < cfg.num_bases
     base_code = jnp.clip(code, 0, cfg.num_bases - 1)
+
+    # base value + word's width class via one-hot integer reduce (k_pad tiny)
     onehot_b = (base_code[:, :, None] == jnp.arange(k_pad)[None, None, :]).astype(jnp.int32)
     base_val = (onehot_b * bases[None, None, :]).sum(axis=2)
+    cls_w = (onehot_b * cls[None, None, :]).sum(axis=2)
+
+    # per-class sub-stream gather at the recomputed page-order ranks
+    delta = jnp.zeros((T, P), jnp.int32)
+    packed = delta_ref[...]
+    for i, (w, cap, off) in enumerate(
+        zip(cfg.width_set, cfg.bucket_caps, cfg.class_lane_offsets)
+    ):
+        if cap == 0:
+            continue
+        sub = unpack(packed[:, off:off + cap * w // 32], w, cap).astype(jnp.int32)
+        half = 1 << (w - 1)
+        sub = jnp.where(sub >= half, sub - (1 << w), sub)
+        inclass = active & (cls_w == i)
+        rank = _cumsum_lanes(inclass.astype(jnp.int32)) - 1
+        delta = delta + _gather_chunks(rank, inclass, sub, cap)
+
     val = base_val + delta
     if wb == 16:
         val = val & 0xFFFF
     val = jnp.where(code == cfg.zero_code, 0, val)
 
-    live = (jnp.arange(cap)[None, :] < nout_ref[...])       # (T, cap)
+    live = (jnp.arange(cap_out)[None, :] < nout_ref[...])       # (T, cap_out)
     onehot_o = (
         (jnp.arange(P, dtype=jnp.int32)[None, :, None] == oidx_ref[...][:, None, :])
         & live[:, None, :]
@@ -60,19 +96,20 @@ def _decode_kernel(
 @functools.partial(jax.jit, static_argnames=("cfg", "pages_per_tile", "interpret"))
 def gbdi_decode_pallas(
     blob: dict[str, jax.Array],
-    bases: jax.Array,
+    table,                         # BaseTable (or bare bases, v1 compat)
     cfg: FRConfig,
     *,
     pages_per_tile: int = DEFAULT_PAGES_PER_TILE,
     interpret: bool = True,
 ) -> jax.Array:
+    from repro.core.format import as_base_table
+
     n_pages = blob["ptrs"].shape[0]
     assert n_pages % pages_per_tile == 0
+    _check_vmem(cfg, pages_per_tile)
     T, P, cap = pages_per_tile, cfg.page_words, cfg.outlier_cap
-    k_pad = max(8, -(-cfg.num_bases // 8) * 8)
-    bases_padded = jnp.concatenate(
-        [bases.astype(jnp.int32), jnp.full((k_pad - cfg.num_bases,), bases[0], jnp.int32)]
-    )[None, :]
+    k_pad = k_padded(cfg)
+    bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
     kernel = functools.partial(_decode_kernel, cfg=cfg, k_pad=k_pad)
     return pl.pallas_call(
         kernel,
@@ -84,11 +121,12 @@ def gbdi_decode_pallas(
             pl.BlockSpec((T, cap), lambda i: (i, 0)),
             pl.BlockSpec((T, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((T, P), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pages, P), jnp.int32),
         interpret=interpret,
     )(
         blob["ptrs"], blob["deltas"], blob["out_vals"], blob["out_idx"],
-        blob["n_out"][:, None], bases_padded,
+        blob["n_out"][:, None], bases_p, cls_p,
     )

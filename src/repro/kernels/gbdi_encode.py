@@ -1,21 +1,28 @@
-"""Pallas TPU kernel: GBDI-FR page encode.
+"""Pallas TPU kernel: GBDI-FR v2 page encode.
 
-TPU adaptation of the paper's C/C++ bit-serial encoder (DESIGN.md §3): the
-bit loop becomes lane-parallel VPU arithmetic —
+TPU adaptation of the paper's C/C++ bit-serial encoder: the bit loop
+becomes lane-parallel VPU arithmetic —
 
 * wrapping deltas against the global base table (resident in VMEM; the
-  table is tiny, ≤ 62 words, so it rides along every tile);
-* width check + code selection as vector compares;
-* outlier compaction WITHOUT dynamic scatter (which does not lower on TPU):
-  a Hillis–Steele prefix sum ranks outliers, then a one-hot integer
-  multiply-reduce materialises the fixed-capacity outlier table.  Integer
-  (not MXU float) reduction keeps full 32-bit exactness;
+  table is tiny, <= 254 bases + their width classes, so it rides along
+  every tile);
+* narrowest-fitting-base selection as vector compares over the per-base
+  width classes (v2: each base carries a class from ``cfg.width_set``);
+* bucket compaction WITHOUT dynamic scatter (which does not lower on TPU):
+  a Hillis–Steele prefix sum ranks each width class's words in page order,
+  then one-hot integer multiply-reduces materialise the fixed-capacity
+  sub-streams chunk-by-chunk (``SLOT_CHUNK`` slots at a time, bounding the
+  transient (tile, page_words, chunk) cube).  Bucket overflow re-codes to
+  the narrowest fitting wider-class base, then to the outlier table —
+  bit-identical to the jnp oracle's spill chain;
 * fixed-width field packing as shifts + adds into int32 lanes.
 
 BlockSpec tiling: ``(pages_per_tile, page_words)`` input tiles in VMEM.
-With the default FRConfig (1024-word pages, k=14) a 4-page tile keeps the
-(tile, P, k) delta cube at 4x1024x16x4 B = 256 KiB — comfortably inside
-VMEM next to the packed outputs.
+The VMEM budget is asserted in code (:func:`vmem_tile_bytes`), not prose:
+with the default FRConfig (2048-word pages, k_pad=16) a 4-page tile keeps
+the (tile, P, k_pad) delta cube at 4x2048x16x4 B = 512 KiB and the largest
+transient — the 4x2048x128x4 B = 4 MiB compaction chunk — comfortably
+inside the 16 MiB/core budget next to the packed outputs.
 """
 from __future__ import annotations
 
@@ -25,9 +32,50 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.format import class_indices
 from repro.core.gbdi_fr import FRConfig
 
 DEFAULT_PAGES_PER_TILE = 4
+SLOT_CHUNK = 128          # compaction one-hot slots per step (VMEM bound)
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def k_padded(cfg: FRConfig) -> int:
+    """Base-table padding to a lane-friendly multiple of 8."""
+    return max(8, -(-cfg.num_bases // 8) * 8)
+
+
+def vmem_tile_bytes(cfg: FRConfig, pages_per_tile: int) -> int:
+    """Conservative per-tile VMEM estimate for the encode/decode kernels."""
+    T, P, w = pages_per_tile, cfg.page_words, 4
+    cube = T * P * k_padded(cfg) * w            # delta/magnitude/cost cubes
+    chunk = T * P * SLOT_CHUNK * w              # compaction one-hot + product
+    out_oh = T * P * cfg.outlier_cap * w        # outlier table one-hot
+    io = T * P * w + T * (cfg.ptr_lanes + cfg.delta_lanes + 2 * cfg.outlier_cap + 3) * w
+    scratch = 8 * T * P * w                     # codes/ranks/masks etc.
+    return io + 3 * cube + 2 * chunk + out_oh + scratch
+
+
+def _check_vmem(cfg: FRConfig, pages_per_tile: int) -> None:
+    est = vmem_tile_bytes(cfg, pages_per_tile)
+    if est > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"encode tile needs ~{est >> 20} MiB VMEM (> {VMEM_BUDGET_BYTES >> 20} MiB); "
+            f"lower pages_per_tile (={pages_per_tile}) or page_words (={cfg.page_words})"
+        )
+
+
+def pad_table(table, cfg: FRConfig) -> tuple[jax.Array, jax.Array]:
+    """(1, k_pad) padded bases + width-class indices for the kernels."""
+    k_pad = k_padded(cfg)
+    pad = k_pad - cfg.num_bases
+    bases = jnp.concatenate(
+        [table.bases.astype(jnp.int32), jnp.full((pad,), table.bases[0], jnp.int32)]
+    )[None, :]
+    cls = class_indices(table.widths, cfg.width_set)
+    # padded entries carry the dead-entry sentinel, like foreign widths
+    cls = jnp.concatenate([cls, jnp.full((pad,), cfg.num_classes, jnp.int32)])[None, :]
+    return bases, cls
 
 
 def _cumsum_lanes(y: jax.Array) -> jax.Array:
@@ -41,50 +89,94 @@ def _cumsum_lanes(y: jax.Array) -> jax.Array:
     return y
 
 
+def _class_map(cls: jax.Array, values: tuple[int, ...]) -> jax.Array:
+    """Static lookup ``values[cls]`` as vector selects (k_pad is tiny)."""
+    out = jnp.zeros(cls.shape, jnp.int32)
+    for i, v in enumerate(values):
+        out = jnp.where(cls == i, jnp.int32(v), out)
+    return out
+
+
+def _compact_chunks(rank, keep, payload, cap: int):
+    """Scatter ``payload[keep]`` to slots ``rank`` of a (T, cap) sub-stream
+    via chunked one-hot multiply-reduce (no dynamic scatter on TPU)."""
+    cols = []
+    for c0 in range(0, cap, SLOT_CHUNK):
+        n = min(SLOT_CHUNK, cap - c0)
+        # arange(n) + c0, not arange(c0, c0+n): the latter is a captured
+        # constant, not an iota, and Pallas rejects non-scalar constants
+        slots = jnp.arange(n, dtype=jnp.int32) + jnp.int32(c0)
+        oh = ((rank[:, :, None] == slots[None, None, :]) & keep[:, :, None]).astype(jnp.int32)
+        cols.append((oh * payload[:, :, None]).sum(axis=1))
+    return jnp.concatenate(cols, axis=1)
+
+
 def _encode_kernel(
-    x_ref, bases_ref, ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, ndrop_ref,
+    x_ref, bases_ref, cls_ref,
+    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, nspill_ref, ndrop_ref,
     *, cfg: FRConfig, k_pad: int,
 ):
     x = x_ref[...]                                   # (T, P) int32
     bases = bases_ref[...][0]                        # (k_pad,) int32
+    cls = cls_ref[...][0]                            # (k_pad,) width-class idx
     T, P = x.shape
-    wb, cap, db = cfg.word_bits, cfg.outlier_cap, cfg.delta_bits
-    half = 1 << (db - 1)
+    wb, cap_out = cfg.word_bits, cfg.outlier_cap
+    BIG = jnp.int32(wb + 1)
 
     d = x[:, :, None] - bases[None, None, :]         # (T, P, k_pad), wraps
     if wb == 16:
         d = ((d + (1 << 15)) & 0xFFFF) - (1 << 15)
     m = jnp.maximum(d, -d - 1)
-    valid = (jnp.arange(k_pad) < cfg.num_bases)[None, None, :]
-    m = jnp.where(valid, m, jnp.int32(2**31 - 1))
-    fits = (m < half) & valid
+    # dead entries: table padding and foreign-width bases (sentinel class)
+    valid = ((jnp.arange(k_pad) < cfg.num_bases) & (cls < cfg.num_classes))[None, None, :]
+    halfs = _class_map(cls, tuple(1 << (w - 1) for w in cfg.width_set))
+    fits = (m < halfs[None, None, :]) & valid
+    widths = _class_map(cls, cfg.width_set)
+    cost = jnp.where(fits, widths[None, None, :], BIG)   # (T, P, k_pad)
 
-    nearest = jnp.argmin(m, axis=2)
-    best = jnp.argmin(jnp.where(fits, m, jnp.int32(2**31 - 1)), axis=2)
-    any_fit = jnp.take_along_axis(fits, best[:, :, None], axis=2)[:, :, 0]
+    sel = jnp.argmin(cost, axis=2).astype(jnp.int32)
+    found = jnp.take_along_axis(cost, sel[:, :, None], axis=2)[:, :, 0] <= wb
     is_zero = x == 0
-    is_out = (~any_fit) & (~is_zero)
+    active = found & ~is_zero
+    out_cand = (~found) & (~is_zero)
 
-    pos = _cumsum_lanes(is_out.astype(jnp.int32)) - 1
-    in_table = is_out & (pos < cap)
-    dropped = is_out & ~in_table
+    # narrow -> wide bucketing + spill chain (matches the oracle bit-for-bit)
+    subs, n_spilled = [], jnp.zeros((T,), jnp.int32)
+    for i, (w, cap) in enumerate(zip(cfg.width_set, cfg.bucket_caps)):
+        oh_sel = (sel[:, :, None] == jnp.arange(k_pad)[None, None, :]).astype(jnp.int32)
+        cls_sel = (oh_sel * cls[None, None, :]).sum(axis=2)
+        inclass = active & (cls_sel == i)
+        rank = _cumsum_lanes(inclass.astype(jnp.int32)) - 1
+        keep = inclass & (rank < cap)
+        over = inclass & ~keep
+        delta = jnp.take_along_axis(d, sel[:, :, None], axis=2)[:, :, 0]
+        payload = (jnp.where(keep, delta, 0) & ((1 << w) - 1)).astype(jnp.int32)
+        sub = _compact_chunks(rank, keep, payload, cap) if cap else jnp.zeros((T, 0), jnp.int32)
+        subs.append(sub)
+        wcost = jnp.where(cls[None, None, :] > i, cost, BIG)
+        alt = jnp.argmin(wcost, axis=2).astype(jnp.int32)
+        alt_ok = jnp.take_along_axis(wcost, alt[:, :, None], axis=2)[:, :, 0] <= wb
+        sel = jnp.where(over & alt_ok, alt, sel)
+        n_spilled = n_spilled + (over & alt_ok).sum(axis=1, dtype=jnp.int32)
+        newly_out = over & ~alt_ok
+        active = active & ~newly_out
+        out_cand = out_cand | newly_out
 
-    base_sel = jnp.where(dropped, nearest, best)
-    delta = jnp.take_along_axis(d, base_sel[:, :, None], axis=2)[:, :, 0]
-    delta = jnp.clip(delta, -half, half - 1)
-    code = jnp.where(is_zero, jnp.int32(cfg.zero_code), base_sel.astype(jnp.int32))
-    code = jnp.where(in_table, jnp.int32(cfg.outlier_code), code)
-    payload = jnp.where(
-        (code == cfg.zero_code) | (code == cfg.outlier_code), 0, delta
-    ).astype(jnp.uint32) & jnp.uint32((1 << db) - 1)
-
-    # one-hot integer compaction (scatter-free)
-    slots = jnp.arange(cap, dtype=jnp.int32)
+    # outlier compaction (one-hot, scatter-free); overflow = dropped -> code
+    # stays outlier with no slot (decodes to 0)
+    pos = _cumsum_lanes(out_cand.astype(jnp.int32)) - 1
+    in_table = out_cand & (pos < cap_out)
+    dropped = out_cand & ~in_table
+    slots = jnp.arange(cap_out, dtype=jnp.int32)
     onehot = ((pos[:, :, None] == slots[None, None, :]) & in_table[:, :, None]).astype(jnp.int32)
     oval_ref[...] = (onehot * x[:, :, None]).sum(axis=1)
     oidx_ref[...] = (onehot * jnp.arange(P, dtype=jnp.int32)[None, :, None]).sum(axis=1)
-    nout_ref[...] = jnp.minimum(is_out.sum(axis=1, dtype=jnp.int32), cap)[:, None]
+    nout_ref[...] = jnp.minimum(out_cand.sum(axis=1, dtype=jnp.int32), cap_out)[:, None]
+    nspill_ref[...] = n_spilled[:, None]
     ndrop_ref[...] = dropped.sum(axis=1, dtype=jnp.int32)[:, None]
+
+    code = jnp.where(is_zero, jnp.int32(cfg.zero_code), sel)
+    code = jnp.where(out_cand, jnp.int32(cfg.outlier_code), code)
 
     # lane packing: shifts + adds (fields are disjoint)
     def pack(vals, bits):
@@ -94,7 +186,9 @@ def _encode_kernel(
         return (y << sh).sum(axis=2, dtype=jnp.uint32).astype(jnp.int32)
 
     ptr_ref[...] = pack(code.astype(jnp.uint32), cfg.ptr_bits)
-    delta_ref[...] = pack(payload, db)
+    delta_ref[...] = jnp.concatenate(
+        [pack(s, w) for s, w in zip(subs, cfg.width_set) if s.shape[1]], axis=1
+    )
 
 
 @functools.partial(
@@ -102,20 +196,22 @@ def _encode_kernel(
 )
 def gbdi_encode_pallas(
     x_pages: jax.Array,            # (n_pages, page_words) int32
-    bases: jax.Array,              # (num_bases,) int32
+    table,                         # BaseTable (or bare bases, v1 compat)
     cfg: FRConfig,
     *,
     pages_per_tile: int = DEFAULT_PAGES_PER_TILE,
     interpret: bool = True,        # CPU container: interpret; TPU: False
 ) -> dict[str, jax.Array]:
+    from repro.core.format import as_base_table
+
     n_pages, P = x_pages.shape
     assert P == cfg.page_words
     assert n_pages % pages_per_tile == 0, "ops.py pads to tile multiple"
+    assert cfg.delta_lanes > 0, "kernel path needs at least one non-empty bucket"
+    _check_vmem(cfg, pages_per_tile)
     T, cap = pages_per_tile, cfg.outlier_cap
-    k_pad = max(8, -(-cfg.num_bases // 8) * 8)  # lane-friendly base padding
-    bases_padded = jnp.concatenate(
-        [bases.astype(jnp.int32), jnp.full((k_pad - cfg.num_bases,), bases[0], jnp.int32)]
-    )[None, :]
+    k_pad = k_padded(cfg)
+    bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
 
     grid = (n_pages // T,)
     out_shapes = (
@@ -125,13 +221,15 @@ def gbdi_encode_pallas(
         jax.ShapeDtypeStruct((n_pages, cap), jnp.int32),
         jax.ShapeDtypeStruct((n_pages, 1), jnp.int32),
         jax.ShapeDtypeStruct((n_pages, 1), jnp.int32),
+        jax.ShapeDtypeStruct((n_pages, 1), jnp.int32),
     )
     kernel = functools.partial(_encode_kernel, cfg=cfg, k_pad=k_pad)
-    ptrs, deltas, out_vals, out_idx, n_out, n_dropped = pl.pallas_call(
+    ptrs, deltas, out_vals, out_idx, n_out, n_spilled, n_dropped = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((T, P), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
             pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
         ],
         out_specs=(
@@ -141,10 +239,11 @@ def gbdi_encode_pallas(
             pl.BlockSpec((T, cap), lambda i: (i, 0)),
             pl.BlockSpec((T, 1), lambda i: (i, 0)),
             pl.BlockSpec((T, 1), lambda i: (i, 0)),
+            pl.BlockSpec((T, 1), lambda i: (i, 0)),
         ),
         out_shape=out_shapes,
         interpret=interpret,
-    )(x_pages, bases_padded)
+    )(x_pages, bases_p, cls_p)
     # match the oracle's blob layout
     return {
         "ptrs": ptrs,
@@ -152,5 +251,6 @@ def gbdi_encode_pallas(
         "out_vals": out_vals,
         "out_idx": out_idx,
         "n_out": n_out[:, 0],
+        "n_spilled": n_spilled[:, 0],
         "n_dropped": n_dropped[:, 0],
     }

@@ -22,24 +22,41 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.gbdi_fr import FRConfig
+from repro.kernels.gbdi_decode import _gather_chunks
+from repro.kernels.gbdi_encode import _cumsum_lanes, k_padded, pad_table
 
 
-def _decode_words(ptrs, deltas, ovals, oidx, n_out, bases, cfg: FRConfig, k_pad: int):
-    """Inline GBDI-FR page decode (1 page) -> (page_words,) int32 words."""
+def _decode_words(ptrs, deltas, ovals, oidx, n_out, bases, cls, cfg: FRConfig, k_pad: int):
+    """Inline GBDI-FR v2 page decode (1 page) -> (page_words,) int32 words."""
     P = cfg.page_words
 
-    def unpack(p, bits):
+    def unpack(p, bits, n):
         per = 32 // bits
         sh = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, :]
         f = (p.astype(jnp.uint32)[:, None] >> sh) & jnp.uint32((1 << bits) - 1)
-        return f.reshape(-1)[:P]
+        return f.reshape(-1)[:n]
 
-    code = unpack(ptrs, cfg.ptr_bits).astype(jnp.int32)
-    raw = unpack(deltas, cfg.delta_bits).astype(jnp.int32)
-    half = 1 << (cfg.delta_bits - 1)
-    delta = jnp.where(raw >= half, raw - (1 << cfg.delta_bits), raw)
+    code = unpack(ptrs, cfg.ptr_bits, P).astype(jnp.int32)
+    active = code < cfg.num_bases
     onehot_b = (jnp.clip(code, 0, cfg.num_bases - 1)[:, None] == jnp.arange(k_pad)[None, :]).astype(jnp.int32)
-    val = (onehot_b * bases[None, :]).sum(axis=1) + delta
+    base_val = (onehot_b * bases[None, :]).sum(axis=1)
+    cls_w = (onehot_b * cls[None, :]).sum(axis=1)
+
+    # per-width-class sub-stream gather at recomputed page-order ranks
+    delta = jnp.zeros((P,), jnp.int32)
+    for i, (w, cap, off) in enumerate(
+        zip(cfg.width_set, cfg.bucket_caps, cfg.class_lane_offsets)
+    ):
+        if cap == 0:
+            continue
+        sub = unpack(deltas[off:off + cap * w // 32], w, cap).astype(jnp.int32)
+        half = 1 << (w - 1)
+        sub = jnp.where(sub >= half, sub - (1 << w), sub)
+        inclass = active & (cls_w == i)
+        rank = _cumsum_lanes(inclass.astype(jnp.int32)[None, :]) - 1
+        delta = delta + _gather_chunks(rank, inclass[None, :], sub[None, :], cap)[0]
+
+    val = base_val + delta
     if cfg.word_bits == 16:
         val = val & 0xFFFF
     val = jnp.where(code == cfg.zero_code, 0, val)
@@ -54,7 +71,7 @@ def _kernel(
     pos_ref, q_ref,
     kp_ref, kd_ref, kov_ref, koi_ref, kno_ref,
     vp_ref, vd_ref, vov_ref, voi_ref, vno_ref,
-    bases_ref,
+    bases_ref, cls_ref,
     acc_ref, m_ref, l_ref,
     *, cfg: FRConfig, k_pad: int, pt: int, n_kv: int, hd: int, groups: int,
 ):
@@ -62,6 +79,7 @@ def _kernel(
     n_slots = pl.num_programs(1)
     pos = pos_ref[0, 0]
     bases = bases_ref[...][0]
+    cls = cls_ref[...][0]
 
     @pl.when(s == 0)
     def _init():
@@ -70,9 +88,9 @@ def _kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
 
     kw = _decode_words(kp_ref[...][0, 0], kd_ref[...][0, 0], kov_ref[...][0, 0],
-                       koi_ref[...][0, 0], kno_ref[0, 0], bases, cfg, k_pad)
+                       koi_ref[...][0, 0], kno_ref[0, 0], bases, cls, cfg, k_pad)
     vw = _decode_words(vp_ref[...][0, 0], vd_ref[...][0, 0], vov_ref[...][0, 0],
-                       voi_ref[...][0, 0], vno_ref[0, 0], bases, cfg, k_pad)
+                       voi_ref[...][0, 0], vno_ref[0, 0], bases, cls, cfg, k_pad)
     K = jax.lax.bitcast_convert_type(kw.astype(jnp.uint16), jnp.bfloat16).reshape(pt, n_kv, hd)
     V = jax.lax.bitcast_convert_type(vw.astype(jnp.uint16), jnp.bfloat16).reshape(pt, n_kv, hd)
 
@@ -102,17 +120,17 @@ def _kernel(
 )
 def paged_attention_decode(
     q: jax.Array,            # (B, Kv, G, hd) f32/bf16
-    pages_k: dict, pages_v: dict, bases: jax.Array, pos: jax.Array,
+    pages_k: dict, pages_v: dict, table, pos: jax.Array,
     cfg: FRConfig, *, n_kv: int, hd: int, groups: int, interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns un-normalised (acc (B,Kv,G,hd) f32, m (B,Kv,G), l (B,Kv,G))."""
+    from repro.core.format import as_base_table
+
     B, n_slots = pages_k["ptrs"].shape[:2]
     pt = cfg.page_words // (n_kv * hd)
     assert pt >= 1 and cfg.page_words % (n_kv * hd) == 0
-    k_pad = max(8, -(-cfg.num_bases // 8) * 8)
-    bases_p = jnp.concatenate(
-        [bases.astype(jnp.int32), jnp.full((k_pad - cfg.num_bases,), bases[0], jnp.int32)]
-    )[None, :]
+    k_pad = k_padded(cfg)
+    bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
     pos_arr = jnp.full((1, 1), pos, jnp.int32)
 
     page_specs = lambda lanes: pl.BlockSpec((1, 1, lanes), lambda b, s: (b, s, 0))
@@ -132,6 +150,7 @@ def paged_attention_decode(
             page_specs(cfg.outlier_cap), page_specs(cfg.outlier_cap),
             pl.BlockSpec((1, 1), lambda b, s: (b, s)),                       # v n_out
             pl.BlockSpec((1, k_pad), lambda b, s: (0, 0)),                   # bases
+            pl.BlockSpec((1, k_pad), lambda b, s: (0, 0)),                   # width cls
         ],
         out_specs=(
             pl.BlockSpec((1, n_kv, groups, hd), lambda b, s: (b, 0, 0, 0)),
@@ -148,7 +167,7 @@ def paged_attention_decode(
         pos_arr, q.astype(jnp.float32),
         pages_k["ptrs"], pages_k["deltas"], pages_k["out_vals"], pages_k["out_idx"], pages_k["n_out"],
         pages_v["ptrs"], pages_v["deltas"], pages_v["out_vals"], pages_v["out_idx"], pages_v["n_out"],
-        bases_p,
+        bases_p, cls_p,
     )
     return acc, m, l
 

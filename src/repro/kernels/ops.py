@@ -3,7 +3,9 @@
 ``backend='kernel'`` runs the Pallas kernels (interpret=True on CPU,
 compiled on TPU); ``backend='ref'`` runs the pure-jnp oracle.  Both produce
 bit-identical blobs.  Tensor-level helpers handle dtype bitcasting and page
-padding so callers hand in plain fp32/bf16/int32 tensors.
+padding so callers hand in plain fp32/bf16/int32 tensors plus the fitted
+:class:`repro.core.format.BaseTable` (a bare bases array is accepted for
+v1 compatibility and treated as all-widest-class).
 """
 from __future__ import annotations
 
@@ -25,35 +27,35 @@ def _on_tpu() -> bool:
 
 
 def encode_pages(
-    x_pages: jax.Array, bases: jax.Array, cfg: FRConfig, backend: str = "ref"
+    x_pages: jax.Array, table, cfg: FRConfig, backend: str = "ref"
 ) -> dict[str, jax.Array]:
     if backend == "kernel":
-        return gbdi_encode_pallas(x_pages, bases, cfg, interpret=not _on_tpu())
-    return _ref.encode_ref(x_pages, bases, cfg)
+        return gbdi_encode_pallas(x_pages, table, cfg, interpret=not _on_tpu())
+    return _ref.encode_ref(x_pages, table, cfg)
 
 
 def decode_pages(
-    blob: dict[str, jax.Array], bases: jax.Array, cfg: FRConfig, backend: str = "ref"
+    blob: dict[str, jax.Array], table, cfg: FRConfig, backend: str = "ref"
 ) -> jax.Array:
     if backend == "kernel":
-        return gbdi_decode_pallas(blob, bases, cfg, interpret=not _on_tpu())
-    return _ref.decode_ref(blob, bases, cfg)
+        return gbdi_decode_pallas(blob, table, cfg, interpret=not _on_tpu())
+    return _ref.decode_ref(blob, table, cfg)
 
 
 def encode_tensor(
-    x: jax.Array, bases: jax.Array, cfg: FRConfig, backend: str = "ref"
+    x: jax.Array, table, cfg: FRConfig, backend: str = "ref"
 ) -> tuple[dict[str, jax.Array], dict]:
     pages, meta = tensor_to_pages(x, cfg)
     pad = (-pages.shape[0]) % DEFAULT_PAGES_PER_TILE if backend == "kernel" else 0
     if pad:
         pages = jnp.pad(pages, ((0, pad), (0, 0)))
     meta["n_pages"] = pages.shape[0]
-    return encode_pages(pages, bases, cfg, backend), meta
+    return encode_pages(pages, table, cfg, backend), meta
 
 
 def decode_tensor(
-    blob: dict[str, jax.Array], meta: dict, bases: jax.Array, cfg: FRConfig,
+    blob: dict[str, jax.Array], meta: dict, table, cfg: FRConfig,
     backend: str = "ref",
 ) -> jax.Array:
-    pages = decode_pages(blob, bases, cfg, backend)
+    pages = decode_pages(blob, table, cfg, backend)
     return pages_to_tensor(pages, meta, cfg)

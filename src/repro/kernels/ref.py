@@ -1,8 +1,10 @@
 """Pure-jnp oracle for the GBDI-FR Pallas kernels.
 
 The oracle *is* the fixed-rate codec in :mod:`repro.core.gbdi_fr` — the
-kernels must reproduce it bit-for-bit (asserted across shape/dtype sweeps in
-``tests/test_kernels.py``).
+kernels must reproduce it bit-for-bit (asserted across shape/dtype/width-set
+sweeps in ``tests/test_kernels.py`` and ``tests/test_fr_v2.py``).  Both
+sides consume the same :class:`repro.core.format.BaseTable`, so there is
+exactly one definition of assignment + spill semantics.
 """
 from __future__ import annotations
 
@@ -11,9 +13,9 @@ import jax
 from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
 
 
-def encode_ref(x_pages: jax.Array, bases: jax.Array, cfg: FRConfig):
-    return fr_encode(x_pages, bases, cfg)
+def encode_ref(x_pages: jax.Array, table, cfg: FRConfig):
+    return fr_encode(x_pages, table, cfg)
 
 
-def decode_ref(blob, bases: jax.Array, cfg: FRConfig):
-    return fr_decode(blob, bases, cfg)
+def decode_ref(blob, table, cfg: FRConfig):
+    return fr_decode(blob, table, cfg)

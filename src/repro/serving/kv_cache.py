@@ -2,7 +2,7 @@
 
 The decode-time memory wall is KV-cache HBM traffic: every generated token
 re-reads the whole cache.  GBDI-FR pages cut those bytes by the fixed rate
-(~1.33x for bf16 at 12 bits/word before table overhead) — the paper's
+(~1.23x for bf16 at ~13 bits/word incl. the outlier table) — the paper's
 bandwidth story applied to serving.
 
 Layout per attention layer (structure-of-arrays, all static shapes):
@@ -10,7 +10,18 @@ Layout per attention layer (structure-of-arrays, all static shapes):
   pages:   ptrs (B, n_pages, ptr_lanes)  deltas (B, n_pages, delta_lanes)
            out_vals/out_idx (B, n_pages, cap)  n_out (B, n_pages)
   tail:    k/v raw ring (B, page_tokens, Kv, hd) — most recent tokens
+  table:   the fitted BaseTable (bases + per-base v2 width classes)
   scalars: handled by the caller (decode position)
+
+The cache is quality-critical, so ``KV_FR`` uses the v2 single-width
+special case (one 8-bit class, full-page bucket): bucket overflow cannot
+occur and base coverage matches v1 exactly — multi-width fits pair some
+bases with the 4-bit class, which shrinks coverage and overflows the
+outlier table on realistic KV distributions (words then decode to 0).
+Multi-width configs remain available per-``KVSpec`` for workloads whose
+measured demand fits (see ``repro.eval.run --sweep``).  Note the
+per-page ``n_spilled``/``n_dropped`` diagnostics are discarded at flush
+(static cache tree); measure them offline via ``fr_encode`` if needed.
 
 A page holds ``page_tokens = page_words // (Kv*hd)`` consecutive tokens'
 K (or V) values.  Appends go to the raw tail; when the tail fills, it is
@@ -29,9 +40,11 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.format import BaseTable
 from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
 
-KV_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14, delta_bits=8, outlier_cap=64)
+KV_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14,
+                 width_set=(8,), bucket_caps=(2048,), outlier_cap=64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,7 +77,7 @@ class KVSpec:
         return 2 * batch * self.max_len * self.row_words * 2
 
 
-def init_compressed(spec: KVSpec, batch: int, bases: jax.Array) -> dict:
+def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> dict:
     fr = spec.fr
     pages_per_row = max(1, spec.row_words // fr.page_words)
     n_slots = spec.n_pages * pages_per_row
@@ -80,7 +93,7 @@ def init_compressed(spec: KVSpec, batch: int, bases: jax.Array) -> dict:
 
     tail = jnp.zeros((batch, spec.page_tokens, spec.n_kv, spec.head_dim), jnp.bfloat16)
     return {"k_pages": page_zeros(), "v_pages": page_zeros(),
-            "k_tail": tail, "v_tail": tail, "bases": bases}
+            "k_tail": tail, "v_tail": tail, "table": table}
 
 
 def _to_words(x16: jax.Array) -> jax.Array:
@@ -91,19 +104,20 @@ def _from_words(w: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(w.astype(jnp.uint16), jnp.bfloat16)
 
 
-def _compress_rows(spec: KVSpec, rows: jax.Array, bases: jax.Array) -> dict:
+def _compress_rows(spec: KVSpec, rows: jax.Array, table: BaseTable) -> dict:
     """rows: (B, page_tokens, Kv, hd) -> per-batch page blobs (B, ppr, ...)."""
     B = rows.shape[0]
     words = _to_words(rows).reshape(B, -1, spec.fr.page_words)
-    blob = jax.vmap(lambda w: fr_encode(w, bases, spec.fr))(words)
+    blob = jax.vmap(lambda w: fr_encode(w, table, spec.fr))(words)
     blob.pop("n_dropped", None)
+    blob.pop("n_spilled", None)
     return blob
 
 
-def _decompress_all(spec: KVSpec, pages: dict, bases: jax.Array) -> jax.Array:
+def _decompress_all(spec: KVSpec, pages: dict, table: BaseTable) -> jax.Array:
     """-> (B, n_pages*page_tokens, Kv, hd) bf16."""
     B = pages["ptrs"].shape[0]
-    words = jax.vmap(lambda b: fr_decode(b, bases, spec.fr))(pages)
+    words = jax.vmap(lambda b: fr_decode(b, table, spec.fr))(pages)
     return _from_words(words.reshape(B, -1, spec.n_kv, spec.head_dim))
 
 
@@ -117,8 +131,8 @@ def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array
     pages_per_row = max(1, spec.row_words * pt // spec.fr.page_words)
 
     def flush(c):
-        kb = _compress_rows(spec, k_tail, cache["bases"])
-        vb = _compress_rows(spec, v_tail, cache["bases"])
+        kb = _compress_rows(spec, k_tail, cache["table"])
+        vb = _compress_rows(spec, v_tail, cache["table"])
         def put(dst, src):
             return jax.tree_util.tree_map(
                 lambda d, s: jax.lax.dynamic_update_slice(
@@ -139,8 +153,8 @@ def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array
 def read_full(spec: KVSpec, cache: dict, pos: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """-> (K, V, valid) covering [0, pos]: decompressed pages with the raw
     tail overlaid for the current (unflushed) page."""
-    K = _decompress_all(spec, cache["k_pages"], cache["bases"])
-    V = _decompress_all(spec, cache["v_pages"], cache["bases"])
+    K = _decompress_all(spec, cache["k_pages"], cache["table"])
+    V = _decompress_all(spec, cache["v_pages"], cache["table"])
     pt = spec.page_tokens
     page_id = pos // pt
     K = jax.lax.dynamic_update_slice(

@@ -104,13 +104,17 @@ class Trainer:
         return params, opt_state
 
     def _refit_fr(self, params):
-        """Paper's 'background data analysis' as a live hook: refit global
-        bases from a parameter sample (stand-in for gradient taps)."""
-        from repro.core.gbdi_fr import FRConfig, fit_fr_bases
+        """Paper's 'background data analysis' as a live hook: refit the
+        global BaseTable (bases + v2 width classes) from a parameter
+        sample (stand-in for gradient taps).  The table feeds the
+        compressed cross-pod exchange, so it must be fitted under the
+        transport config (GRAD_FR) — fit and encode widths agree."""
+        from repro.core.gbdi_fr import fit_fr_bases
+        from repro.distributed.collectives import GRAD_FR
 
         leaves = [p for p in jax.tree.leaves(params) if p.dtype == jnp.bfloat16 and p.size > 4096]
         if not leaves:
             return
         sample = jnp.concatenate([l.reshape(-1)[:4096] for l in leaves[:8]])
         words = jax.lax.bitcast_convert_type(sample, jnp.uint16).astype(jnp.int32)
-        self.fr_bases = fit_fr_bases(words, FRConfig())
+        self.fr_bases = fit_fr_bases(words, GRAD_FR)

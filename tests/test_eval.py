@@ -153,7 +153,9 @@ def test_fr_codec_size_model_is_fixed_rate():
     rng = np.random.default_rng(0)
     data = rng.integers(0, 2**32, cfg.page_words * 3, dtype=np.uint32)
     blob = codec.encode(data, codec.fit(data))
-    expect = 3 * cfg.compressed_bytes_per_page() * 8 + cfg.num_bases * cfg.word_bits
+    # v2 global table: base value + width-class index per base
+    idx_bits = (len(cfg.width_set) - 1).bit_length()
+    expect = 3 * cfg.compressed_bytes_per_page() * 8 + cfg.num_bases * (cfg.word_bits + idx_bits)
     assert codec.size_bits(blob) == expect
 
 

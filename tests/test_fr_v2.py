@@ -1,0 +1,151 @@
+"""GBDI-FR v2 contract tests: capacity-bounded losslessness, the
+narrow->wide->outlier spill chain, and kernel/oracle blob parity across
+width-set configs."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.format import BaseTable
+from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode
+from repro.kernels import ops
+
+
+def _class_demand_ok(x, table, cfg):
+    """True iff no page's class demand exceeds its bucket (no spills) and
+    per-page outliers fit the table — the capacity-bounded-lossless regime."""
+    from repro.core.format import class_indices, delta_fit
+
+    cls = class_indices(table.widths, cfg.width_set)
+    ok = True
+    for page in np.asarray(x):
+        d, fits = delta_fit(jnp.asarray(page), table, word_bits=cfg.word_bits)
+        cost = jnp.where(fits, table.widths[None, :], jnp.int32(cfg.word_bits + 1))
+        sel = np.asarray(jnp.argmin(cost, axis=1))
+        found = np.asarray(jnp.take_along_axis(cost, jnp.asarray(sel)[:, None], axis=1))[:, 0] <= cfg.word_bits
+        nz = page != 0
+        out = int(((~found) & nz).sum())
+        ok &= out <= cfg.outlier_cap
+        for i, cap in enumerate(cfg.bucket_caps):
+            ok &= int((found & nz & (np.asarray(cls)[sel] == i)).sum()) <= cap
+    return ok
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_bit_exact_when_no_overflow(seed):
+    """Whenever no bucket or outlier capacity overflows, pages roundtrip
+    bit-exactly with zero spills/drops; otherwise mismatches stay within
+    the reported drop count (the full capacity-bounded contract — every
+    example asserts one branch or the other)."""
+    rng = np.random.default_rng(seed)
+    cfg = FRConfig(word_bits=16, page_words=128, num_bases=6,
+                   width_set=(4, 8), bucket_caps=(64, 128), outlier_cap=16)
+    centers = rng.integers(200, 2**16 - 200, cfg.num_bases)
+    spread = int(rng.integers(2, 120))
+    w = (centers[rng.integers(0, cfg.num_bases, (3, cfg.page_words))]
+         + rng.integers(-spread, spread + 1, (3, cfg.page_words)))
+    w[rng.random((3, cfg.page_words)) < 0.2] = 0
+    x = jnp.asarray((w & 0xFFFF).astype(np.int64), dtype=jnp.int32)
+    table = fit_fr_bases(x, cfg)
+    blob = fr_encode(x, table, cfg)
+    dec = np.asarray(fr_decode(blob, table, cfg)) & 0xFFFF
+    if _class_demand_ok(x, table, cfg):
+        assert int(np.asarray(blob["n_spilled"]).sum()) == 0
+        assert int(np.asarray(blob["n_dropped"]).sum()) == 0
+        np.testing.assert_array_equal(dec, np.asarray(x) & 0xFFFF)
+    else:
+        mism = int((dec != (np.asarray(x) & 0xFFFF)).sum())
+        assert mism <= int(np.asarray(blob["n_dropped"]).sum())
+
+
+def test_spill_chain_narrow_to_wide_to_outlier():
+    """Bucket overflow walks the chain: narrow bucket -> wider bucket (both
+    bit-exact) -> outlier table (bit-exact) -> dropped (decodes to 0)."""
+    cfg = FRConfig(word_bits=16, page_words=128, num_bases=3,
+                   width_set=(2, 4, 8), bucket_caps=(16, 8, 8), outlier_cap=4)
+    # three bases close together so a word fitting the 2-bit base also fits
+    # the 4- and 8-bit bases
+    table = BaseTable(jnp.asarray([1000, 1001, 1005], jnp.int32),
+                      jnp.asarray([2, 4, 8], jnp.int32))
+    w = np.zeros((1, cfg.page_words), np.int64)
+    w[0, :40] = 1000          # all narrowest-fit the 2-bit base
+    x = jnp.asarray(w, dtype=jnp.int32)
+    blob = fr_encode(x, table, cfg)
+    # 16 kept @2bit; 24 spill -> 8 kept @4bit; 16 spill -> 8 kept @8bit;
+    # 8 overflow everything -> 4 to the outlier table, 4 dropped
+    assert int(blob["n_spilled"][0]) == 24 + 16
+    assert int(blob["n_out"][0]) == 4
+    assert int(blob["n_dropped"][0]) == 4
+    dec = np.asarray(fr_decode(blob, table, cfg))[0]
+    assert (dec[:36] == 1000).all()          # buckets + outlier table: exact
+    assert (dec[36:40] == 0).all()           # dropped words decode to 0
+    assert (dec[40:] == 0).all()             # untouched zero words
+
+
+def test_spill_stays_bit_exact_without_outliers():
+    """Spilling alone (wide bucket has room) loses nothing."""
+    cfg = FRConfig(word_bits=16, page_words=128, num_bases=2,
+                   width_set=(4, 8), bucket_caps=(8, 128), outlier_cap=4)
+    table = BaseTable(jnp.asarray([5000, 5003], jnp.int32),
+                      jnp.asarray([4, 8], jnp.int32))
+    rng = np.random.default_rng(0)
+    w = 5000 + rng.integers(-7, 8, (2, cfg.page_words)).astype(np.int64)
+    x = jnp.asarray(w, dtype=jnp.int32)
+    blob = fr_encode(x, table, cfg)
+    assert int(np.asarray(blob["n_dropped"]).sum()) == 0
+    assert int(np.asarray(blob["n_spilled"]).sum()) > 0   # 4-bit bucket is tiny
+    np.testing.assert_array_equal(np.asarray(fr_decode(blob, table, cfg)), w)
+
+
+PARITY_CFGS = [
+    FRConfig(word_bits=16, page_words=256, num_bases=6, width_set=(4, 8),
+             bucket_caps=(64, 192), outlier_cap=16),
+    FRConfig(word_bits=16, page_words=256, num_bases=6, width_set=(2, 4, 8),
+             bucket_caps=(16, 64, 160), outlier_cap=16),
+    FRConfig(word_bits=32, page_words=256, num_bases=5, width_set=(8, 16),
+             bucket_caps=(64, 192), outlier_cap=32),
+    # spill-heavy corner: tiny buckets force the whole chain
+    FRConfig(word_bits=16, page_words=128, num_bases=6, width_set=(2, 4, 8),
+             bucket_caps=(16, 8, 8), outlier_cap=4),
+]
+
+
+@pytest.mark.parametrize(
+    "cfg", PARITY_CFGS,
+    ids=lambda c: f"wb{c.word_bits}_w{'-'.join(map(str, c.width_set))}_caps{'-'.join(map(str, c.bucket_caps))}",
+)
+def test_cross_backend_blob_parity(cfg):
+    """Pallas kernels and the jnp oracle emit bit-identical v2 blobs and
+    decodes, including under bucket spill and outlier drop."""
+    rng = np.random.default_rng(cfg.page_words + cfg.num_bases)
+    mask = (1 << cfg.word_bits) - 1
+    centers = rng.integers(0, mask, cfg.num_bases)
+    w = (centers[rng.integers(0, cfg.num_bases, (4, cfg.page_words))]
+         + rng.integers(-120, 120, (4, cfg.page_words)))
+    w[:, ::7] = 0
+    x = jnp.asarray((w & mask).astype(np.int64), dtype=jnp.int32)
+    table = fit_fr_bases(x, cfg)
+    rb = fr_encode(x, table, cfg)
+    kb = ops.encode_pages(x, table, cfg, backend="kernel")
+    assert set(rb) == set(kb)
+    for k in rb:
+        np.testing.assert_array_equal(np.asarray(kb[k]), np.asarray(rb[k]), err_msg=k)
+    np.testing.assert_array_equal(
+        np.asarray(ops.decode_pages(kb, table, cfg, backend="kernel")),
+        np.asarray(fr_decode(rb, table, cfg)),
+    )
+
+
+def test_v1_compat_config_and_bare_bases():
+    """FRConfig(delta_bits=w) is the single-width special case, and a bare
+    bases array is accepted as an all-widest-class table."""
+    cfg = FRConfig(word_bits=16, page_words=128, num_bases=4, delta_bits=8,
+                   outlier_cap=8)
+    assert cfg.width_set == (8,) and cfg.bucket_caps == (128,)
+    bases = jnp.asarray([5000, 9000, 20000, 40000], jnp.int32)
+    w = np.array([5003, 8900, 20127, 39872, 0, 12345] + [0] * 122, np.int64)
+    x = jnp.asarray(w[None, :], dtype=jnp.int32)
+    blob = fr_encode(x, bases, cfg)
+    assert int(blob["n_dropped"][0]) == 0
+    np.testing.assert_array_equal(np.asarray(fr_decode(blob, bases, cfg))[0], w)

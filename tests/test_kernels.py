@@ -9,18 +9,29 @@ from repro.core.gbdi_fr import (
 )
 from repro.kernels import ops
 
-# interpret-mode Pallas is slow on CPU: the two default-shaped configs run
-# in the tier-1 suite, the off-shape sweep rides the slow lane (--runslow)
+# interpret-mode Pallas is slow on CPU: small-page multi-width configs run
+# in the tier-1 suite, the production-shaped sweep rides the slow lane
+# (--runslow)
 CFGS = [
-    FRConfig(),                                                   # bf16 default
+    FRConfig(word_bits=16, page_words=256, width_set=(4, 8),
+             bucket_caps=(64, 224), outlier_cap=16),
+    FRConfig(word_bits=32, page_words=256, width_set=(8, 16),
+             bucket_caps=(64, 224), outlier_cap=32),
+    pytest.param(FRConfig(), marks=pytest.mark.slow),   # bf16 production default
     pytest.param(
-        FRConfig(word_bits=16, page_words=1024, delta_bits=4, outlier_cap=32),
+        FRConfig(word_bits=16, page_words=1024, width_set=(2, 4, 8),
+                 bucket_caps=(128, 256, 768), outlier_cap=32),
         marks=pytest.mark.slow),
-    FRConfig(word_bits=32, page_words=1024, delta_bits=16, outlier_cap=64),
     pytest.param(
-        FRConfig(word_bits=32, page_words=2048, delta_bits=8, num_bases=14, outlier_cap=128),
+        FRConfig(word_bits=32, page_words=2048, delta_bits=8, num_bases=14,
+                 outlier_cap=128),                       # v1-compat single width
         marks=pytest.mark.slow),
 ]
+
+
+def _cfg_id(c):
+    return (f"wb{c.word_bits}_p{c.page_words}_w{'-'.join(map(str, c.width_set))}"
+            f"_c{c.outlier_cap}")
 
 
 def _pages(rng, cfg, n_pages, style):
@@ -40,34 +51,38 @@ def _pages(rng, cfg, n_pages, style):
     return jnp.asarray((w & mask).astype(np.int64), dtype=jnp.int32)
 
 
-@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"wb{c.word_bits}_p{c.page_words}_d{c.delta_bits}_c{c.outlier_cap}")
+@pytest.mark.parametrize("cfg", CFGS, ids=_cfg_id)
 @pytest.mark.parametrize("style", ["gauss", "clustered", "zeros", "uniform"])
 def test_kernel_matches_ref(cfg, style):
     rng = np.random.default_rng(hash((cfg.word_bits, cfg.page_words, style)) % 2**31)
     x = _pages(rng, cfg, 8, style)
-    bases = fit_fr_bases(x, cfg)
-    ref_blob = fr_encode(x, bases, cfg)
-    ker_blob = ops.encode_pages(x, bases, cfg, backend="kernel")
+    table = fit_fr_bases(x, cfg)
+    ref_blob = fr_encode(x, table, cfg)
+    ker_blob = ops.encode_pages(x, table, cfg, backend="kernel")
     for k in ref_blob:
         np.testing.assert_array_equal(np.asarray(ker_blob[k]), np.asarray(ref_blob[k]), err_msg=k)
-    ref_dec = fr_decode(ref_blob, bases, cfg)
-    ker_dec = ops.decode_pages(ker_blob, bases, cfg, backend="kernel")
+    ref_dec = fr_decode(ref_blob, table, cfg)
+    ker_dec = ops.decode_pages(ker_blob, table, cfg, backend="kernel")
     np.testing.assert_array_equal(np.asarray(ker_dec), np.asarray(ref_dec))
 
 
 def test_fr_lossless_within_capacity():
-    """Pages with <= outlier_cap outliers roundtrip bit-exactly."""
+    """Pages whose class demand fits every bucket + outlier cap roundtrip
+    bit-exactly (the capacity-bounded-lossless contract)."""
     rng = np.random.default_rng(5)
-    cfg = FRConfig()
+    # widest bucket takes a full page: bucket spill is impossible, only the
+    # injected outliers consume the outlier table
+    cfg = FRConfig(word_bits=16, page_words=2048, num_bases=14,
+                   width_set=(4, 8), bucket_caps=(256, 2048), outlier_cap=64)
     centers = rng.integers(0, 2**16 - 1, cfg.num_bases)
     w = centers[rng.integers(0, cfg.num_bases, (4, cfg.page_words))] + rng.integers(-100, 100, (4, cfg.page_words))
     # inject exactly outlier_cap far values per page
     w[:, : cfg.outlier_cap] = rng.integers(0, 2**16 - 1, (4, cfg.outlier_cap))
     x = jnp.asarray((w & 0xFFFF).astype(np.int64), dtype=jnp.int32)
-    bases = jnp.asarray((centers & 0xFFFF).astype(np.int64) - (1 << 15), dtype=jnp.int32) + (1 << 15)
-    blob = fr_encode(x, bases, cfg)
+    table = fit_fr_bases(x, cfg)
+    blob = fr_encode(x, table, cfg)
     assert int(blob["n_dropped"].sum()) == 0
-    dec = fr_decode(blob, bases, cfg)
+    dec = fr_decode(blob, table, cfg)
     # compare mod 2^16 (decode canonicalises to [0, 65535])
     np.testing.assert_array_equal(np.asarray(dec) & 0xFFFF, np.asarray(x) & 0xFFFF)
 
@@ -77,10 +92,10 @@ def test_tensor_roundtrip_bf16():
     cfg = FRConfig()
     x = jnp.asarray(rng.normal(0, 0.3, (3, 5, 257)).astype(np.float32)).astype(jnp.bfloat16)
     pages, meta = tensor_to_pages(x, cfg)
-    bases = fit_fr_bases(pages, cfg)
-    blob, meta2 = ops.encode_tensor(x, bases, cfg, backend="kernel")
+    table = fit_fr_bases(pages, cfg)
+    blob, meta2 = ops.encode_tensor(x, table, cfg, backend="kernel")
     meta.update(meta2)
-    y = ops.decode_tensor(blob, meta, bases, cfg, backend="kernel")
+    y = ops.decode_tensor(blob, meta, table, cfg, backend="kernel")
     assert y.shape == x.shape and y.dtype == x.dtype
     # near-lossless: dropped-outlier fraction is the only error source
     frac = float(jnp.mean((y == x).astype(jnp.float32)))
@@ -91,14 +106,15 @@ def test_tensor_roundtrip_bf16():
 @given(st.integers(0, 2**31 - 1))
 def test_kernel_property_random(seed):
     rng = np.random.default_rng(seed)
-    cfg = FRConfig(word_bits=16, page_words=256, delta_bits=8, outlier_cap=16)
+    cfg = FRConfig(word_bits=16, page_words=256, num_bases=14,
+                   width_set=(4, 8), bucket_caps=(64, 192), outlier_cap=16)
     x = _pages(rng, cfg, 4, rng.choice(["gauss", "clustered", "zeros", "uniform"]))
-    bases = fit_fr_bases(x, cfg)
-    rb = fr_encode(x, bases, cfg)
-    kb = ops.encode_pages(x, bases, cfg, backend="kernel")
+    table = fit_fr_bases(x, cfg)
+    rb = fr_encode(x, table, cfg)
+    kb = ops.encode_pages(x, table, cfg, backend="kernel")
     for k in rb:
         np.testing.assert_array_equal(np.asarray(kb[k]), np.asarray(rb[k]), err_msg=k)
     np.testing.assert_array_equal(
-        np.asarray(ops.decode_pages(kb, bases, cfg, backend="kernel")),
-        np.asarray(fr_decode(rb, bases, cfg)),
+        np.asarray(ops.decode_pages(kb, table, cfg, backend="kernel")),
+        np.asarray(fr_decode(rb, table, cfg)),
     )

@@ -10,9 +10,11 @@ from repro.kernels.gbdi_paged_attn import merge_softmax, paged_attention_decode
 from repro.serving import kv_cache as kvc
 
 KV, HD, B = 4, 32, 2
+# v2 multi-width: narrow class spills bit-exactly into the full-page wide
+# bucket, so the tiny test pages keep v1 quality
 SPEC = kvc.KVSpec(n_kv=KV, head_dim=HD, max_len=64,
-                  fr=FRConfig(word_bits=16, page_words=128, delta_bits=8,
-                              num_bases=14, outlier_cap=16))
+                  fr=FRConfig(word_bits=16, page_words=128, width_set=(4, 8),
+                              bucket_caps=(32, 128), num_bases=14, outlier_cap=16))
 
 
 def _mk_kv(rng, n):
@@ -81,7 +83,7 @@ def test_paged_attention_kernel_vs_oracle():
     qg = jnp.asarray(q).reshape(B, KV, G, HD)
 
     acc, m, l = paged_attention_decode(
-        qg, cache["k_pages"], cache["v_pages"], cache["bases"], pos, SPEC.fr,
+        qg, cache["k_pages"], cache["v_pages"], cache["table"], pos, SPEC.fr,
         n_kv=KV, hd=HD, groups=G, interpret=True,
     )
     # tail stream (the current partial page) via the oracle read
