@@ -1,44 +1,46 @@
 """Encode/decode engine throughput (paper §IV: compression/decompression
-engines), driven through the unified eval registry — the same
-workload/codec tables as ``repro.eval.run`` — instead of a hand-rolled
-loop.  Covers the host variable-length codec (numpy), the device
-fixed-rate codec (jit'd jnp oracle) and the Pallas kernels
-(interpret mode on CPU — those timings are NOT TPU-representative,
-documented; the jit'd oracle is the CPU datapoint)."""
+engines) — the repo's perf baseline generator.
+
+Thin delegate over ``python -m repro.eval.run --throughput`` (one
+implementation of the harness, CSV convention, and artifact schema):
+warmed, median-of-K encode/decode GiB/s for every codec x workload
+family, written to ``experiments/BENCH_throughput.json``.
+
+Codec roles on CPU: ``gbdi``/``bdi`` are the numpy host codecs, ``fr`` is
+the vmapped jnp oracle, ``fr_xla`` is the compiled batched fast path (the
+CPU datapoint), and ``fr_kernel`` interprets the Pallas kernels on a small
+stream — a correctness reference whose timing is NOT TPU-representative.
+
+  PYTHONPATH=src python benchmarks/bench_throughput.py            # full baseline
+  PYTHONPATH=src python benchmarks/bench_throughput.py --quick    # CI smoke
+"""
 from __future__ import annotations
 
-from repro.eval.codecs import default_codecs
-from repro.eval.run import evaluate_cell
-from repro.eval.workloads import default_workloads
+import argparse
 
-#: (workload, codec, bytes) triples: one dump family for the host codec,
-#: one bf16 tensor family for the fixed-rate device paths.  The interpret-
-#: mode kernel gets a smaller stream — its CPU timing is a correctness
-#: datapoint, not a throughput claim
-PAIRS = [
-    ("605.mcf_s", "gbdi", 2 << 20),
-    ("605.mcf_s", "bdi", 2 << 20),
-    ("ml_kvcache_bf16", "fr", 2 << 20),
-    ("ml_kvcache_bf16", "fr_kernel", 256 << 10),
-]
+from repro.eval import run as eval_run
 
 
-def main():
-    workloads = default_workloads()
-    codecs = default_codecs()
-    for wl_name, codec_name, n_bytes in PAIRS:
-        wl = workloads.get(wl_name)
-        codec = codecs.make(codec_name, wl.word_bits)
-        data = wl.generate(n_bytes, seed=0)
-        # first call pays jit compilation; the second is the steady-state
-        # datapoint the benchmark reports
-        evaluate_cell(wl, codec, data, verify=False)
-        cell = evaluate_cell(wl, codec, data, verify=False)
-        mb = cell.n_bytes / (1 << 20)
-        print(f"throughput/{codec_name}_encode/{wl_name},"
-              f"{cell.encode_s / mb * 1e6:.0f},MB/s={cell.encode_mb_s:.1f}")
-        print(f"throughput/{codec_name}_decode/{wl_name},"
-              f"{cell.decode_s / mb * 1e6:.0f},MB/s={mb / max(cell.decode_s, 1e-9):.1f}")
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bytes", type=int, default=2 << 20, dest="n_bytes")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--codec", default=eval_run.THROUGHPUT_CODECS)
+    ap.add_argument("--json", default="experiments/BENCH_throughput.json",
+                    help="artifact path ('' to skip writing)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small streams / fewer repeats (CI smoke)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.n_bytes, args.repeats = 256 << 10, 2
+
+    cli = ["--throughput", "--csv", "--codec", args.codec,
+           "--bytes", str(args.n_bytes), "--repeats", str(args.repeats),
+           "--seed", str(args.seed)]
+    if args.json:
+        cli += ["--json", args.json]
+    eval_run.main(cli)
 
 
 if __name__ == "__main__":

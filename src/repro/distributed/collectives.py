@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.format import BaseTable
-from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
+from repro.core.gbdi_fr import FRConfig
+from repro.kernels import xla as fr_xla
 
 # Gradients are quality-critical: one 8-bit class with a full-page bucket
 # (the v2 single-width special case) — bucket overflow cannot occur, so
@@ -64,15 +65,16 @@ def pod_shard_map(f, mesh, in_specs, out_specs, *, manual_axes=("pod",)):
 
 
 def _encode_leaf(g: jax.Array, table: BaseTable):
+    """All pages of a leaf in one batched compiled dispatch (kernels.xla)."""
     flat = g.astype(jnp.bfloat16).reshape(-1)
     words = jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.int32)
     pad = (-words.shape[0]) % GRAD_FR.page_words
     words = jnp.pad(words, (0, pad))
-    return fr_encode(words.reshape(-1, GRAD_FR.page_words), table, GRAD_FR)
+    return fr_xla.encode_pages(words.reshape(-1, GRAD_FR.page_words), table, GRAD_FR)
 
 
 def _decode_leaf(blob, table: BaseTable, n, shape, dtype):
-    words = fr_decode(blob, table, GRAD_FR).reshape(-1)[:n]
+    words = fr_xla.decode_pages(blob, table, GRAD_FR).reshape(-1)[:n]
     flat = jax.lax.bitcast_convert_type(words.astype(jnp.uint16), jnp.bfloat16)
     return flat.astype(dtype).reshape(shape)
 

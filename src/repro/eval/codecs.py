@@ -1,9 +1,10 @@
 """``fit/encode/decode/size_bits`` adapters over the repo's codec paths.
 
-The four concrete codecs are the paper's GBDI host codec
+The concrete codecs are the paper's GBDI host codec
 (:mod:`repro.core.gbdi`), the B∆I baseline (:mod:`repro.core.bdi`), and
-the fixed-rate device format GBDI-FR in both its pure-jnp oracle and
-Pallas-kernel backends (:mod:`repro.core.gbdi_fr`, :mod:`repro.kernels`).
+the fixed-rate device format GBDI-FR in its pure-jnp oracle, compiled
+batched XLA, and Pallas-kernel backends (:mod:`repro.core.gbdi_fr`,
+:mod:`repro.kernels.xla`, :mod:`repro.kernels`).
 
 The adapter contract (duck-typed, see :class:`repro.eval.registry.CodecRegistry`):
 
@@ -92,7 +93,7 @@ class FRCodec:
     """
 
     word_bits: int = 16
-    backend: str = "ref"          # "ref" (jnp oracle) | "kernel" (Pallas)
+    backend: str = "ref"          # "ref" | "kernel" | "xla" | "auto" (see kernels.ops)
     name: str = "fr"
     lossless: bool = False
     cfg: FRConfig | None = None
@@ -123,16 +124,17 @@ class FRCodec:
         from repro.kernels import ops
 
         cfg = self._config()
+        backend = ops.resolve_backend(self.backend)
         words = gbdi.to_words(data, cfg.word_bits)
         signed = gbdi.words_to_signed(words, cfg.word_bits)
         n = signed.size
         pad = (-n) % cfg.page_words
         pages = np.pad(signed, (0, pad)).reshape(-1, cfg.page_words)
-        if self.backend == "kernel":   # Pallas grid wants whole tiles
+        if backend == "kernel":   # Pallas grid wants whole tiles
             row_pad = (-pages.shape[0]) % ops.DEFAULT_PAGES_PER_TILE
             if row_pad:
                 pages = np.pad(pages, ((0, row_pad), (0, 0)))
-        blob = dict(ops.encode_pages(jnp.asarray(pages), table, cfg, backend=self.backend))
+        blob = dict(ops.encode_pages(jnp.asarray(pages), table, cfg, backend=backend))
         blob.update(_table=table, _cfg=cfg, _n_words=n)
         return blob
 
@@ -142,7 +144,7 @@ class FRCodec:
         cfg: FRConfig = blob["_cfg"]
         pages = ops.decode_pages(
             {k: v for k, v in blob.items() if not k.startswith("_")},
-            blob["_table"], cfg, backend=self.backend,
+            blob["_table"], cfg, backend=ops.resolve_backend(self.backend),
         )
         signed = np.asarray(pages).reshape(-1)[: blob["_n_words"]]
         return gbdi.signed_to_words(signed, cfg.word_bits)
@@ -168,6 +170,8 @@ def default_codecs() -> CodecRegistry:
     reg.register("gbdi", lambda wb: GBDICodec(word_bits=wb))
     reg.register("bdi", lambda wb: BDICodec(word_bits=wb))
     reg.register("fr", lambda wb: FRCodec(word_bits=wb, backend="ref"))
+    reg.register("fr_xla", lambda wb: FRCodec(word_bits=wb, backend="xla",
+                                              name="fr_xla"))
     reg.register("fr_kernel", lambda wb: FRCodec(word_bits=wb, backend="kernel",
                                                  name="fr_kernel"))
     return reg

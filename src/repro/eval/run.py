@@ -5,18 +5,28 @@
       --bytes 262144 --json experiments/BENCH_eval.json
   PYTHONPATH=src python -m repro.eval.run --sweep --suite ml \
       --json experiments/BENCH_sweep.json
+  PYTHONPATH=src python -m repro.eval.run --throughput \
+      --json experiments/BENCH_throughput.json
 
 Per cell the runner fits, encodes, decodes, **verifies the roundtrip**
 (bit-exact for lossless codecs; for the fixed-rate codec, mismatching
 words must not exceed the reported dropped-outlier count), and records
-CR / bits-per-word / encode throughput.  Output is an aligned stdout
-table, ``name,us_per_call,derived`` CSV lines matching the ``benchmarks/``
+CR / bits-per-word / encode throughput.  Encode/decode timings are warmed
+(first call pays jit compilation, untimed) and the median of ``--repeats``
+blocked calls.  Output is an aligned stdout table,
+``name,us_per_call,derived`` CSV lines matching the ``benchmarks/``
 convention, and a ``BENCH_*.json``-style artifact.
 
 ``--sweep`` walks a num_bases x width_set/bucket_caps grid of GBDI-FR v2
 configs over the selected suite and emits a Pareto table (geomean CR vs
 encode MB/s, Pareto-optimal rows marked) plus a ``BENCH_sweep.json``
 artifact — replacing the ad-hoc benchmark loops the ROADMAP called out.
+
+``--throughput`` is the perf baseline: warmed, median-of-K encode/decode
+GiB/s per codec x workload family (no CR columns, no verification), with
+a ``BENCH_throughput.json`` artifact.  The compiled ``fr_xla`` backend is
+the CPU datapoint; interpret-mode ``fr_kernel`` runs on a small stream as
+a correctness reference, not a throughput claim.
 """
 from __future__ import annotations
 
@@ -29,31 +39,62 @@ import numpy as np
 from repro.eval.registry import CodecRegistry, EvalCell, Workload, WorkloadRegistry
 
 
+def _block(tree):
+    """Wait for async (jit-dispatched) results so wall-clock timings are real."""
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return tree
+
+
+def _timed_median(fn, repeats: int) -> float:
+    """Median wall-clock seconds of ``repeats`` calls; caller warms up first
+    (``fn`` must block on completion, e.g. via :func:`_block`).  The one
+    timing methodology shared by BENCH_eval and BENCH_throughput."""
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
 def evaluate_cell(
     workload: Workload,
     codec,
     data: np.ndarray,
     *,
     verify: bool = True,
+    repeats: int = 3,
 ) -> EvalCell:
-    """Measure one (workload, codec) pair on already-generated ``data``."""
+    """Measure one (workload, codec) pair on already-generated ``data``.
+
+    Timing methodology: the first encode/decode call is an untimed warmup
+    (it pays jit compilation and device-constant upload for the jitted
+    codecs); ``enc_s``/``dec_s`` are the **median of ``repeats`` warmed
+    calls**, each blocked on completion — so the throughput columns in
+    BENCH_eval.json measure steady state, not compile time or dispatch
+    latency.
+    """
     from repro.core.gbdi import to_words
 
     n_bytes = int(np.ascontiguousarray(data).view(np.uint8).size)
     wb = codec.word_bits
     n_words = (n_bytes * 8 + wb - 1) // wb
+    repeats = max(1, repeats)
 
     t0 = time.perf_counter()
     model = codec.fit(data)          # offline background analysis —
     fit_s = time.perf_counter() - t0  # not part of encode throughput
-    t0 = time.perf_counter()
-    blob = codec.encode(data, model)
-    size_bits = int(codec.size_bits(blob))
-    enc_s = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    decoded = np.asarray(codec.decode(blob)).reshape(-1)
-    dec_s = time.perf_counter() - t0
+    blob = _block(codec.encode(data, model))      # warmup: jit compile etc.
+    size_bits = int(codec.size_bits(blob))
+    enc_s = _timed_median(lambda: _block(codec.encode(data, model)), repeats)
+
+    decoded = np.asarray(codec.decode(blob)).reshape(-1)  # warmup + verify data
+    dec_s = _timed_median(lambda: np.asarray(codec.decode(blob)), repeats)
 
     ref = to_words(data, wb)
     got = decoded[: ref.size]
@@ -100,6 +141,7 @@ def evaluate(
     n_bytes: int = 1 << 20,
     seed: int = 0,
     verify: bool = True,
+    repeats: int = 3,
 ) -> list[EvalCell]:
     cells: list[EvalCell] = []
     codec_names = [c.strip() for c in codecs.split(",") if c.strip()]
@@ -108,7 +150,8 @@ def evaluate(
         for cname in codec_names:
             codec = codec_registry.make(cname, wl.word_bits)
             try:
-                cells.append(evaluate_cell(wl, codec, data, verify=verify))
+                cells.append(evaluate_cell(wl, codec, data, verify=verify,
+                                           repeats=repeats))
             except Exception as e:  # keep the sweep alive, report the cell red
                 cells.append(EvalCell(
                     workload=wl.name, kind=wl.kind, codec=cname,
@@ -173,7 +216,9 @@ def sweep(
                     name=f"fr[k{num_bases}/w{'-'.join(map(str, width_set))}]",
                 )
                 data = wl.generate(n_bytes, seed)
-                cells.append(evaluate_cell(wl, codec, data, verify=verify))
+                # repeats=1: the sweep is a CR Pareto, not a timing harness
+                cells.append(evaluate_cell(wl, codec, data, verify=verify,
+                                           repeats=1))
             # one label per word size actually evaluated — a mixed suite
             # sweeps paired shapes, e.g. "k14/w4-8|w8-16"
             label = f"k{num_bases}/" + "|".join(
@@ -214,6 +259,132 @@ def format_sweep_table(rows: list[dict]) -> str:
             f"{'yes' if r['verified'] else 'NO':>3} {'*' if r['pareto'] else '':>6}"
         )
     return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# throughput harness (warmed, median-of-K GiB/s per codec x workload family)
+# ---------------------------------------------------------------------------
+
+#: one representative stream per workload family, plus both bf16 ML
+#: distributions the serving/training paths actually move
+THROUGHPUT_WORKLOADS = (
+    "605.mcf_s",          # C
+    "java_svm",           # Java
+    "col_int_keys",       # Column
+    "ml_kvcache_bf16",    # ML (serving KV distribution)
+    "ml_grads_bf16",      # ML (gradient-transport distribution)
+)
+THROUGHPUT_CODECS = "gbdi,bdi,fr,fr_xla,fr_kernel"
+#: interpret-mode Pallas is a correctness oracle ~10^3x slower than the
+#: compiled paths — it gets a smaller stream (GiB/s normalises it away)
+KERNEL_N_BYTES = 256 << 10
+
+
+def measure_throughput(
+    workload: Workload, codec, data: np.ndarray, *, repeats: int = 5,
+) -> dict:
+    """Warmed, blocked, median-of-``repeats`` encode/decode GiB/s."""
+    n_bytes = int(np.ascontiguousarray(data).view(np.uint8).size)
+    model = codec.fit(data)
+    blob = _block(codec.encode(data, model))      # warmup: jit + constants
+    enc_s = _timed_median(lambda: _block(codec.encode(data, model)), repeats)
+    np.asarray(codec.decode(blob))                 # decode warmup
+    dec_s = _timed_median(lambda: np.asarray(codec.decode(blob)), repeats)
+    gib = n_bytes / (1 << 30)
+    return {
+        "workload": workload.name,
+        "kind": workload.kind,
+        "codec": codec.name,
+        "n_bytes": n_bytes,
+        "repeats": max(1, repeats),
+        "enc_s": enc_s,
+        "dec_s": dec_s,
+        "enc_gib_s": gib / max(enc_s, 1e-12),
+        "dec_gib_s": gib / max(dec_s, 1e-12),
+    }
+
+
+def throughput(
+    workload_registry: WorkloadRegistry,
+    codec_registry: CodecRegistry,
+    *,
+    suite: str = "",
+    codecs: str = THROUGHPUT_CODECS,
+    n_bytes: int = 2 << 20,
+    kernel_n_bytes: int = KERNEL_N_BYTES,
+    repeats: int = 5,
+    seed: int = 0,
+) -> list[dict]:
+    """One row per (workload, codec): warmed median-of-K encode/decode GiB/s.
+
+    ``suite=''`` uses :data:`THROUGHPUT_WORKLOADS` (every family covered);
+    any registry suite string narrows/extends the set.
+    """
+    if suite:
+        workloads = workload_registry.select(suite)
+    else:
+        workloads = [workload_registry.get(n) for n in THROUGHPUT_WORKLOADS]
+    codec_names = [c.strip() for c in codecs.split(",") if c.strip()]
+    rows: list[dict] = []
+    for wl in workloads:
+        streams = {nb: wl.generate(nb, seed)
+                   for nb in {kernel_n_bytes if c == "fr_kernel" else n_bytes
+                              for c in codec_names}}
+        for cname in codec_names:
+            data = streams[kernel_n_bytes if cname == "fr_kernel" else n_bytes]
+            codec = codec_registry.make(cname, wl.word_bits)
+            rows.append(measure_throughput(wl, codec, data, repeats=repeats))
+    return rows
+
+
+def throughput_summary(rows: list[dict]) -> list[dict]:
+    """Mean GiB/s per codec x workload family (kind)."""
+    groups: dict[tuple[str, str], list[dict]] = {}
+    for r in rows:
+        groups.setdefault((r["codec"], r["kind"]), []).append(r)
+    return [
+        {
+            "codec": codec,
+            "kind": kind,
+            "n_workloads": len(g),
+            "enc_gib_s": float(np.mean([r["enc_gib_s"] for r in g])),
+            "dec_gib_s": float(np.mean([r["dec_gib_s"] for r in g])),
+        }
+        for (codec, kind), g in sorted(groups.items())
+    ]
+
+
+def format_throughput_table(rows: list[dict]) -> str:
+    hdr = f"{'workload':<20} {'kind':<7} {'codec':<10} {'MiB':>6} " \
+          f"{'enc GiB/s':>10} {'dec GiB/s':>10}"
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['workload']:<20} {r['kind']:<7} {r['codec']:<10} "
+            f"{r['n_bytes'] / (1 << 20):>6.2f} {r['enc_gib_s']:>10.3f} "
+            f"{r['dec_gib_s']:>10.3f}"
+        )
+    for s in throughput_summary(rows):
+        lines.append(f"family {s['kind']:<7} {s['codec']:<10} "
+                     f"enc={s['enc_gib_s']:.3f} dec={s['dec_gib_s']:.3f} GiB/s")
+    return "\n".join(lines)
+
+
+def throughput_artifact(rows: list[dict], *, codecs: str, n_bytes: int,
+                        kernel_n_bytes: int, repeats: int, seed: int) -> dict:
+    from repro.kernels import ops
+
+    return {
+        "bench": "throughput",
+        "codecs": codecs,
+        "n_bytes": n_bytes,
+        "kernel_n_bytes": kernel_n_bytes,
+        "repeats": repeats,
+        "seed": seed,
+        "auto_backend": ops.resolve_backend("auto"),
+        "rows": rows,
+        "summary": throughput_summary(rows),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -285,11 +456,13 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
                     help="'all', or comma list of kinds (c,java,column,ml) "
                          "and/or workload names")
     ap.add_argument("--codec", default=None,
-                    help="comma list from: gbdi, bdi, fr, fr_kernel "
-                         "(fr_kernel interprets the Pallas kernels on CPU). "
-                         "Default: all four; for --sweep: fr (jnp oracle)")
-    ap.add_argument("--bytes", type=int, default=1 << 20, dest="n_bytes",
-                    help="stream size per workload (default 1 MiB)")
+                    help="comma list from: gbdi, bdi, fr, fr_xla, fr_kernel "
+                         "(fr_xla is the compiled batched CPU/GPU path; "
+                         "fr_kernel interprets the Pallas kernels on CPU). "
+                         "Default: all five; for --sweep: fr (jnp oracle)")
+    ap.add_argument("--bytes", type=int, default=None, dest="n_bytes",
+                    help="stream size per workload (default 1 MiB; "
+                         "2 MiB for --throughput)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true")
     ap.add_argument("--json", default="", help="write BENCH_*.json artifact here")
@@ -298,7 +471,50 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
     ap.add_argument("--sweep", action="store_true",
                     help="sweep num_bases x width_set FR configs; Pareto "
                          "table + BENCH_sweep.json instead of per-codec cells")
+    ap.add_argument("--throughput", action="store_true",
+                    help="perf baseline: warmed median-of-K GiB/s per codec "
+                         "x workload family + BENCH_throughput.json")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed repeats per measurement (median is reported; "
+                         "default 3, 5 for --throughput)")
     args = ap.parse_args(argv)
+
+    if args.throughput:
+        n_bytes = args.n_bytes if args.n_bytes is not None else 2 << 20
+        repeats = args.repeats if args.repeats is not None else 5
+        codecs = args.codec or THROUGHPUT_CODECS
+        kernel_n_bytes = min(KERNEL_N_BYTES, n_bytes)
+        try:
+            rows = throughput(
+                default_workloads(), default_codecs(), suite=args.suite
+                if args.suite != "all" else "", codecs=codecs,
+                n_bytes=n_bytes, kernel_n_bytes=kernel_n_bytes,
+                repeats=repeats, seed=args.seed,
+            )
+        except KeyError as e:
+            raise SystemExit(f"error: {e.args[0] if e.args else e}")
+        print(format_throughput_table(rows))
+        if args.csv:
+            for r in rows:
+                mb = r["n_bytes"] / (1 << 20)
+                print(f"throughput/{r['codec']}_encode/{r['workload']},"
+                      f"{r['enc_s'] / mb * 1e6:.0f},GiB/s={r['enc_gib_s']:.3f}")
+                print(f"throughput/{r['codec']}_decode/{r['workload']},"
+                      f"{r['dec_s'] / mb * 1e6:.0f},GiB/s={r['dec_gib_s']:.3f}")
+        if args.json:
+            from pathlib import Path
+
+            p = Path(args.json)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(json.dumps(throughput_artifact(
+                rows, codecs=codecs, n_bytes=n_bytes,
+                kernel_n_bytes=kernel_n_bytes, repeats=repeats,
+                seed=args.seed), indent=2))
+            print(f"wrote {p}")
+        return []
+
+    if args.n_bytes is None:
+        args.n_bytes = 1 << 20
 
     if args.sweep:
         # kernel backend only on explicit request: interpret-mode Pallas is
@@ -327,8 +543,9 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
     try:
         cells = evaluate(
             default_workloads(), default_codecs(),
-            suite=args.suite, codecs=args.codec or "gbdi,bdi,fr,fr_kernel",
+            suite=args.suite, codecs=args.codec or "gbdi,bdi,fr,fr_xla,fr_kernel",
             n_bytes=args.n_bytes, seed=args.seed, verify=not args.no_verify,
+            repeats=args.repeats if args.repeats is not None else 3,
         )
     except KeyError as e:  # unknown suite/workload/codec: clean CLI error
         raise SystemExit(f"error: {e.args[0] if e.args else e}")
@@ -343,7 +560,7 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
         p.parent.mkdir(parents=True, exist_ok=True)
         p.write_text(json.dumps(
             to_artifact(cells, suite=args.suite,
-                        codecs=args.codec or "gbdi,bdi,fr,fr_kernel",
+                        codecs=args.codec or "gbdi,bdi,fr,fr_xla,fr_kernel",
                         n_bytes=args.n_bytes, seed=args.seed), indent=2))
         print(f"wrote {p}")
     bad = [c for c in cells if not c.verified]

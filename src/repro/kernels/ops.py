@@ -1,9 +1,21 @@
-"""Public jit'd wrappers around the GBDI-FR codec.
+"""Public wrappers around the GBDI-FR codec with backend selection.
 
-``backend='kernel'`` runs the Pallas kernels (interpret=True on CPU,
-compiled on TPU); ``backend='ref'`` runs the pure-jnp oracle.  Both produce
-bit-identical blobs.  Tensor-level helpers handle dtype bitcasting and page
-padding so callers hand in plain fp32/bf16/int32 tensors plus the fitted
+Backends (all produce bit-identical blobs):
+
+* ``'ref'``    — the pure-jnp oracle (:mod:`repro.kernels.ref`), vmapped
+  per-page; the semantic ground truth.
+* ``'kernel'`` — the Pallas kernels: compiled on TPU, interpret mode
+  elsewhere.  Interpret mode is a correctness oracle, orders of magnitude
+  slower than compiled code — it runs only when a caller explicitly asks
+  for ``'kernel'`` off-TPU.
+* ``'xla'``    — the natively batched jit-compiled path
+  (:mod:`repro.kernels.xla`): one XLA dispatch per page batch, memoized
+  device table constants.  The compiled fast path off TPU.
+* ``'auto'``   — resolves to ``'kernel'`` on TPU and ``'xla'`` everywhere
+  else; never resolves to interpret mode.  This is the default.
+
+Tensor-level helpers handle dtype bitcasting and page padding so callers
+hand in plain fp32/bf16/int32 tensors plus the fitted
 :class:`repro.core.format.BaseTable` (a bare bases array is accepted for
 v1 compatibility and treated as all-widest-class).
 """
@@ -20,31 +32,50 @@ from repro.core.gbdi_fr import (
 from repro.kernels.gbdi_decode import gbdi_decode_pallas
 from repro.kernels.gbdi_encode import DEFAULT_PAGES_PER_TILE, gbdi_encode_pallas
 from repro.kernels import ref as _ref
+from repro.kernels import xla as _xla
+
+BACKENDS = ("ref", "kernel", "xla", "auto")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_backend(backend: str | None = "auto") -> str:
+    """Resolve ``'auto'``/``None`` to the compiled backend for this device."""
+    if backend in (None, "auto"):
+        return "kernel" if _on_tpu() else "xla"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    return backend
+
+
 def encode_pages(
-    x_pages: jax.Array, table, cfg: FRConfig, backend: str = "ref"
+    x_pages: jax.Array, table, cfg: FRConfig, backend: str = "auto"
 ) -> dict[str, jax.Array]:
+    backend = resolve_backend(backend)
     if backend == "kernel":
         return gbdi_encode_pallas(x_pages, table, cfg, interpret=not _on_tpu())
+    if backend == "xla":
+        return _xla.encode_pages(x_pages, table, cfg)
     return _ref.encode_ref(x_pages, table, cfg)
 
 
 def decode_pages(
-    blob: dict[str, jax.Array], table, cfg: FRConfig, backend: str = "ref"
+    blob: dict[str, jax.Array], table, cfg: FRConfig, backend: str = "auto"
 ) -> jax.Array:
+    backend = resolve_backend(backend)
     if backend == "kernel":
         return gbdi_decode_pallas(blob, table, cfg, interpret=not _on_tpu())
+    if backend == "xla":
+        return _xla.decode_pages(blob, table, cfg)
     return _ref.decode_ref(blob, table, cfg)
 
 
 def encode_tensor(
-    x: jax.Array, table, cfg: FRConfig, backend: str = "ref"
+    x: jax.Array, table, cfg: FRConfig, backend: str = "auto"
 ) -> tuple[dict[str, jax.Array], dict]:
+    backend = resolve_backend(backend)
     pages, meta = tensor_to_pages(x, cfg)
     pad = (-pages.shape[0]) % DEFAULT_PAGES_PER_TILE if backend == "kernel" else 0
     if pad:
@@ -55,7 +86,7 @@ def encode_tensor(
 
 def decode_tensor(
     blob: dict[str, jax.Array], meta: dict, table, cfg: FRConfig,
-    backend: str = "ref",
+    backend: str = "auto",
 ) -> jax.Array:
     pages = decode_pages(blob, table, cfg, backend)
     return pages_to_tensor(pages, meta, cfg)

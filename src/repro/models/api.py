@@ -87,7 +87,10 @@ class Model:
         x = constrain_batch(x, cfg)
         S = x.shape[1]
         if mode == "decode":
-            positions = jnp.asarray([cache_pos], jnp.int32) if jnp.ndim(cache_pos) == 0 else cache_pos
+            if jnp.ndim(cache_pos) == 0:
+                positions = jnp.asarray([cache_pos], jnp.int32)      # (S=1,)
+            else:  # per-slot positions: (B,) -> (B, S=1) for RoPE
+                positions = jnp.asarray(cache_pos, jnp.int32)[:, None]
         else:
             positions = jnp.arange(S, dtype=jnp.int32)
         x, new_cache, aux = stack_apply(
@@ -153,8 +156,42 @@ class Model:
         logits = self._head(p, h[:, -1:])
         return new_cache, logits
 
+    def merge_cache_rows(self, old: Params, new: Params, keep_new: jax.Array) -> Params:
+        """Row-wise cache merge: batch rows where ``keep_new`` is True take
+        ``new``, the rest keep ``old`` bit-for-bit.
+
+        This is what lets the serving engine prefill a request into a free
+        slot while other slots are mid-decode: the prefill runs over the
+        full batch, then only the admitted rows' cache lines are adopted.
+        Cache structure mirrors :func:`transformer.stack_cache_init` —
+        period-stacked leaves carry batch on axis 1, tail leaves on axis 0.
+        """
+        def merge(axis):
+            def f(o, n):
+                if not hasattr(o, "ndim"):
+                    return n
+                shape = [1] * o.ndim
+                shape[axis] = keep_new.shape[0]
+                return jnp.where(keep_new.reshape(shape), n, o)
+            return f
+
+        out: Params = {}
+        if "periods" in old:
+            out["periods"] = jax.tree.map(merge(1), old["periods"], new["periods"])
+        out["tail"] = jax.tree.map(merge(0), old["tail"], new["tail"])
+        return out
+
+    def prefill_into(self, p: Params, batch: dict, cache: Params, row_mask: jax.Array):
+        """Prefill only the batch rows selected by ``row_mask`` (bool (B,)),
+        leaving every other row's cache untouched (bit-stable)."""
+        new_cache, logits = self.prefill(p, batch, cache)
+        return self.merge_cache_rows(cache, new_cache, row_mask), logits
+
     def decode_step(self, p: Params, step_in: dict, cache: Params, pos):
-        """step_in: {"tokens": (B,1)} (LM/vlm) or {"frame_embeds": (B,1,d)}."""
+        """step_in: {"tokens": (B,1)} (LM/vlm) or {"frame_embeds": (B,1,d)}.
+
+        ``pos`` is a scalar (shared decode position) or a (B,) vector of
+        per-slot positions (continuous batching with staggered admits)."""
         h, new_cache, _, _ = self.hidden(p, step_in, cache=cache, cache_pos=pos, mode="decode")
         return self._head(p, h), new_cache
 

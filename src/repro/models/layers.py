@@ -132,7 +132,7 @@ def attention_apply(
     window: int = 0,
     prefix_len: int = 0,
     cache: Params | None = None,    # {"k","v"}: (B, S_cache, Kv, hd)
-    cache_pos: jax.Array | None = None,  # scalar int32: next write slot
+    cache_pos: jax.Array | None = None,  # int32 next write slot: scalar or (B,)
 ) -> tuple[jax.Array, Params | None]:
     """Returns (out (B,S,d), updated cache or None).
 
@@ -185,17 +185,34 @@ def attention_apply(
                 }
         return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_cache
 
-    # decode: append one step, attend to the cache
+    # decode: append one step, attend to the cache.  ``cache_pos`` is a
+    # scalar (all rows at one shared position) or a (B,) vector of per-slot
+    # positions — the continuous-batching engine admits new sequences into
+    # free slots while others decode, so every row owns its position.
     W = cache["k"].shape[1]
-    slot = cache_pos % W if window else cache_pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
     slots = jnp.arange(W, dtype=jnp.int32)
-    if window:
-        key_pos = cache_pos - ((cache_pos - slots) % W)
-        valid = key_pos >= 0
+    if jnp.ndim(cache_pos) == 0:
+        slot = cache_pos % W if window else cache_pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        if window:
+            key_pos = cache_pos - ((cache_pos - slots) % W)
+            valid = key_pos >= 0                                 # (W,)
+        else:
+            valid = slots <= cache_pos
+        vmask = valid[None, None, None, None, :]
     else:
-        valid = slots <= cache_pos
+        cp = cache_pos.astype(jnp.int32)                         # (B,)
+        slot = cp % W if window else cp
+        upd = jax.vmap(lambda c, x1, s: jax.lax.dynamic_update_slice(c, x1, (s, 0, 0)))
+        ck = upd(cache["k"], k, slot)
+        cv = upd(cache["v"], v, slot)
+        if window:
+            key_pos = cp[:, None] - ((cp[:, None] - slots[None, :]) % W)
+            valid = key_pos >= 0                                 # (B, W)
+        else:
+            valid = slots[None, :] <= cp[:, None]
+        vmask = valid[:, None, None, None, :]
     # explicit f32 casts keep the scan-carried cache bf16: without them the
     # CPU backend's bf16-dot legalisation hoists f32 converts onto the whole
     # stacked cache (observed: 2x566 GB/step phantom traffic in the walker)
@@ -204,7 +221,7 @@ def attention_apply(
         q.reshape(B, S, Kv, H // Kv, hd).astype(jnp.float32),
         ck.astype(jnp.float32),
     ) * scale
-    logits = jnp.where(valid[None, None, None, None, :], logits, jnp.float32(-1e30))
+    logits = jnp.where(vmask, logits, jnp.float32(-1e30))
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", probs, cv.astype(jnp.float32))
     out = out.reshape(B, S, H * hd).astype(x.dtype)

@@ -3,9 +3,13 @@
 A deliberately small but real scheduler: fixed decode batch slots, each
 slot holding one sequence; new requests prefill into a free slot; every
 engine tick decodes one token for all active slots (continuous batching).
-The KV cache is the model's stacked cache tree — raw mode by default,
-GBDI-FR compressed pages via ``serving.kv_cache`` for attention archs
-(the §Perf serving variant).
+Each slot owns its decode position (``slot_pos``), so admission can
+prefill into free slots *while other slots are mid-decode*: the prefill
+runs over the full batch and only the admitted rows' cache lines are
+adopted (:meth:`repro.models.api.Model.prefill_into`), leaving in-flight
+rows bit-stable.  The KV cache is the model's stacked cache tree — raw
+mode by default, GBDI-FR compressed pages via ``serving.kv_cache`` for
+attention archs (the §Perf serving variant).
 """
 from __future__ import annotations
 
@@ -34,65 +38,69 @@ class Engine:
         self.B, self.max_len = batch_slots, max_len
         self.cache = model.init_cache(batch_slots, max_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
-        self.pos = 0
+        self.slot_pos = np.zeros(batch_slots, np.int32)  # per-slot next write pos
         self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(model.prefill)
+        self._prefill = jax.jit(model.prefill_into)
 
     def admit(self, reqs: list[Request]) -> int:
         """Prefill a batch of requests into free slots (same length prompts
         share one prefill; production would bucket by length).
 
-        Admission is refused while any slot is mid-generation: prefill
-        writes cache positions ``0..S`` for *every* batch row and resets the
-        shared decode position, so admitting into a busy batch would corrupt
-        the KV cache and position of in-flight sequences.  (Per-slot
-        admission needs per-slot positions in the model cache — a future
-        scheduler change; callers simply re-offer the request next round.)
+        Admission works mid-generation: the prefill computes over every
+        batch row, but only the admitted rows' cache lines are merged in,
+        and per-slot positions mean in-flight rows keep decoding at their
+        own offsets, bit-stable (regression-tested in test_substrate).
         """
-        if any(r is not None and not r.done for r in self.slot_req):
-            return 0
-        free = [i for i, r in enumerate(self.slot_req) if r is None or r.done]
-        take = reqs[: len(free)]
-        if not take:
-            return 0
         for i in range(self.B):  # done slots are released wholesale
             if self.slot_req[i] is not None and self.slot_req[i].done:
                 self.slot_req[i] = None
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        take = reqs[: len(free)]
+        if not take:
+            return 0
         S = max(len(r.prompt) for r in take)
         toks = np.zeros((self.B, S), np.int32)
+        mask = np.zeros(self.B, bool)
         for slot, r in zip(free, take):
             toks[slot, S - len(r.prompt):] = r.prompt
             self.slot_req[slot] = r
-        self.cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)}, self.cache)
-        self.pos = S
+            mask[slot] = True
+        self.cache, logits = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.cache,
+            jnp.asarray(mask),
+        )
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for slot, r in zip(free, take):
+            self.slot_pos[slot] = S
             r.out.append(int(nxt[slot]))
         return len(take)
 
     def tick(self) -> bool:
         """Decode one token for every active slot. Returns any-active."""
-        active = [r for r in self.slot_req if r is not None and not r.done]
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and not r.done]
         if not active:
             return False
-        if self.pos >= self.max_len - 1:
-            # cache ceiling: truncate in-flight requests so their slots
-            # free up — otherwise admit() would refuse new work forever
-            for r in active:
-                r.done = True
+        for i in active:
+            # per-slot cache ceiling: truncate so the slot frees up —
+            # otherwise admit() would never see it released
+            if self.slot_pos[i] >= self.max_len - 1:
+                self.slot_req[i].done = True
+        active = [i for i in active if not self.slot_req[i].done]
+        if not active:
             return False
         last = np.zeros((self.B, 1), np.int32)
         for i, r in enumerate(self.slot_req):
             if r is not None and not r.done and r.out:
                 last[i, 0] = r.out[-1]
         logits, self.cache = self._decode(
-            self.params, {"tokens": jnp.asarray(last)}, self.cache, jnp.int32(self.pos)
+            self.params, {"tokens": jnp.asarray(last)}, self.cache,
+            jnp.asarray(self.slot_pos),
         )
-        self.pos += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for i, r in enumerate(self.slot_req):
-            if r is None or r.done:
-                continue
+        for i in active:
+            r = self.slot_req[i]
+            self.slot_pos[i] += 1
             r.out.append(int(nxt[i]))
             if len(r.out) >= r.max_new:
                 r.done = True

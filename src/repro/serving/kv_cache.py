@@ -26,8 +26,10 @@ per-page ``n_spilled``/``n_dropped`` diagnostics are discarded at flush
 A page holds ``page_tokens = page_words // (Kv*hd)`` consecutive tokens'
 K (or V) values.  Appends go to the raw tail; when the tail fills, it is
 compressed into the next page slot (branchless ``lax.cond``).  Reads
-decompress pages on the fly — or never leave VMEM at all in the fused
-Pallas kernel (:mod:`repro.kernels.gbdi_paged_attn`).
+decompress pages on the fly; decode attention defaults to the compiled
+batched paged-attention path (:mod:`repro.kernels.xla`) with the raw tail
+softmax-merged in — or never leaves VMEM at all in the fused Pallas
+kernel (:mod:`repro.kernels.gbdi_paged_attn`) on TPU.
 
 Keys/values cache *with RoPE already applied* (like the raw cache), so
 page contents are position-final and compress-once.
@@ -41,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.format import BaseTable
-from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
+from repro.core.gbdi_fr import FRConfig
+from repro.kernels import xla as fr_xla
 
 KV_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14,
                  width_set=(8,), bucket_caps=(2048,), outlier_cap=64)
@@ -105,19 +108,23 @@ def _from_words(w: jax.Array) -> jax.Array:
 
 
 def _compress_rows(spec: KVSpec, rows: jax.Array, table: BaseTable) -> dict:
-    """rows: (B, page_tokens, Kv, hd) -> per-batch page blobs (B, ppr, ...)."""
+    """rows: (B, page_tokens, Kv, hd) -> per-batch page blobs (B, ppr, ...).
+
+    All B * pages_per_row pages go through ONE batched compiled dispatch
+    (:mod:`repro.kernels.xla`), not a vmap-of-vmap over single pages.
+    """
     B = rows.shape[0]
     words = _to_words(rows).reshape(B, -1, spec.fr.page_words)
-    blob = jax.vmap(lambda w: fr_encode(w, table, spec.fr))(words)
+    blob = dict(fr_xla.encode_pages(words, table, spec.fr))
     blob.pop("n_dropped", None)
     blob.pop("n_spilled", None)
     return blob
 
 
 def _decompress_all(spec: KVSpec, pages: dict, table: BaseTable) -> jax.Array:
-    """-> (B, n_pages*page_tokens, Kv, hd) bf16."""
+    """-> (B, n_pages*page_tokens, Kv, hd) bf16; one batched dispatch."""
     B = pages["ptrs"].shape[0]
-    words = jax.vmap(lambda b: fr_decode(b, table, spec.fr))(pages)
+    words = fr_xla.decode_pages(pages, table, spec.fr)
     return _from_words(words.reshape(B, -1, spec.n_kv, spec.head_dim))
 
 
@@ -166,15 +173,55 @@ def read_full(spec: KVSpec, cache: dict, pos: jax.Array) -> tuple[jax.Array, jax
     return K, V, valid
 
 
-def attention_decode(spec: KVSpec, q: jax.Array, cache: dict, pos: jax.Array) -> jax.Array:
-    """q: (B, 1, H, hd) -> (B, 1, H*hd); oracle path (explicit decompress)."""
-    K, V, valid = read_full(spec, cache, pos)
-    B, S, Kv, hd = K.shape
-    H = q.shape[2]
-    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
-    qg = q.reshape(B, 1, Kv, H // Kv, hd)
-    logits = jnp.einsum("bskgh,btkh->bkgst", qg, K).astype(jnp.float32) * scale
-    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(V.dtype)
-    out = jnp.einsum("bkgst,btkh->bskgh", probs, V)
-    return out.reshape(B, 1, H * hd)
+def attention_decode(
+    spec: KVSpec, q: jax.Array, cache: dict, pos: jax.Array,
+    backend: str = "auto",
+) -> jax.Array:
+    """q: (B, 1, H, hd) -> (B, 1, H*hd) over the compressed cache.
+
+    ``backend='oracle'`` decompresses every page to HBM then attends (the
+    semantic reference).  ``'xla'``/``'auto'`` (default) attend over the
+    full compressed pages with the compiled paged-attention decode
+    (:func:`repro.kernels.xla.paged_attention_decode`) and merge the raw
+    tail via the streaming-softmax identity — one batched dispatch, no
+    decompressed cache materialised between layers.
+    """
+    if backend not in ("oracle", "xla", "auto"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "choose from ('oracle', 'xla', 'auto')")
+    if backend == "oracle":
+        K, V, valid = read_full(spec, cache, pos)
+        B, S, Kv, hd = K.shape
+        H = q.shape[2]
+        scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+        qg = q.reshape(B, 1, Kv, H // Kv, hd)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qg, K).astype(jnp.float32) * scale
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(V.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, V)
+        return out.reshape(B, 1, H * hd)
+
+    from repro.kernels.gbdi_paged_attn import merge_softmax
+
+    B, _, H, hd = q.shape
+    Kv = spec.n_kv
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, hd).astype(jnp.float32)
+    acc, m, l = fr_xla.paged_attention_decode(
+        qg, cache["k_pages"], cache["v_pages"], cache["table"], pos, spec.fr,
+        n_kv=Kv, hd=hd, groups=G,
+    )
+    # raw-tail stream (the current partial page), then softmax-merge
+    pt = spec.page_tokens
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    Kt = cache["k_tail"].astype(jnp.float32)
+    Vt = cache["v_tail"].astype(jnp.float32)
+    tail_valid = (pos // pt) * pt + jnp.arange(pt) <= pos
+    lg = jnp.einsum("bkgh,btkh->bkgt", qg, Kt) * scale
+    lg = jnp.where(tail_valid[None, None, None, :], lg, -1e30)
+    m2 = lg.max(-1)
+    p2 = jnp.where(lg <= -1e29, 0.0, jnp.exp(lg - m2[..., None]))
+    acc2 = jnp.einsum("bkgt,btkh->bkgh", p2, Vt)
+    accm, _, lm = merge_softmax(acc, m, l, acc2, m2, p2.sum(-1))
+    out = accm / lm[..., None]
+    return out.reshape(B, 1, H * hd).astype(cache["k_tail"].dtype)

@@ -101,7 +101,8 @@ def test_paged_attention_kernel_vs_oracle():
     accm, mm, lm = merge_softmax(acc, m, l, acc2, m2, l2)
     out_kernel = (accm / lm[..., None]).reshape(B, 1, H * HD)
 
-    out_oracle = kvc.attention_decode(SPEC, jnp.asarray(q), cache, pos)
+    out_oracle = kvc.attention_decode(SPEC, jnp.asarray(q), cache, pos,
+                                      backend="oracle")
     np.testing.assert_allclose(
         np.asarray(out_kernel), np.asarray(out_oracle), atol=2e-2, rtol=2e-2
     )
