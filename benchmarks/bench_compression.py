@@ -2,11 +2,16 @@
 
 Per-workload CR for GBDI and the B∆I baseline over every registered
 family — the paper's dump classes (C/Java) plus the column-store and
-ML-tensor families this repo adds — with per-cell lossless verification
-done inside :mod:`repro.eval`.  Validation targets (paper): Java ~1.55x,
-C ~1.4x, overall 1.4-1.45x, GBDI > BDI.
+ML-tensor families this repo adds, and any real ``dump:<name>`` images
+ingested via ``python -m repro.eval.ingest`` (pass ``--dump-dir`` or set
+``REPRO_DUMP_DIR``) — with per-cell lossless verification done inside
+:mod:`repro.eval`.  Validation targets (paper): Java ~1.55x, C ~1.4x,
+overall 1.4-1.45x, GBDI > BDI; real dumps have no paper target, their CR
+*is* the new evidence (see ``docs/BENCHMARKS.md``).
 """
 from __future__ import annotations
+
+import argparse
 
 from repro.eval.codecs import default_codecs
 from repro.eval.run import csv_lines, evaluate, geomean
@@ -16,8 +21,8 @@ MB = 4 << 20
 
 
 def run(n_bytes: int = MB, seed: int = 0, suite: str = "all",
-        codecs: str = "gbdi,bdi") -> list:
-    cells = evaluate(default_workloads(), default_codecs(),
+        codecs: str = "gbdi,bdi", dump_dir: str | None = None) -> list:
+    cells = evaluate(default_workloads(dump_dir), default_codecs(),
                      suite=suite, codecs=codecs, n_bytes=n_bytes, seed=seed)
     bad = [c for c in cells if not c.verified]
     assert not bad, [f"{c.workload}/{c.codec}: {c.error}" for c in bad]
@@ -32,20 +37,32 @@ def summarize(cells: list) -> dict:
         "cr_java_avg": geomean(by_kind("Java")),
         "cr_column_avg": geomean(by_kind("Column")),
         "cr_ml_avg": geomean(by_kind("ML")),
+        "cr_dump_avg": geomean(by_kind("Dump")),
         "cr_all_avg": geomean(c.compression_ratio for c in gbdi),
         "cr_bdi_avg": geomean(c.compression_ratio for c in cells if c.codec == "bdi"),
         "paper_c": 1.4, "paper_java": 1.55, "paper_all": 1.45,
     }
 
 
-def main():
-    cells = run()
+def main(argv: list[str] | None = None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", default="all")
+    ap.add_argument("--codec", default="gbdi,bdi")
+    ap.add_argument("--bytes", type=int, default=MB, dest="n_bytes")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dump-dir", default=None,
+                    help="registers ingested dump:<name> families "
+                         "(default: $REPRO_DUMP_DIR or experiments/dumps)")
+    args = ap.parse_args(argv)
+    cells = run(n_bytes=args.n_bytes, seed=args.seed, suite=args.suite,
+                codecs=args.codec, dump_dir=args.dump_dir)
     for line in csv_lines(cells):
         print(line.replace("eval/", "compression/", 1))
     s = summarize(cells)
     print(f"compression/summary,0,"
           f"c={s['cr_c_avg']:.3f};java={s['cr_java_avg']:.3f};"
           f"column={s['cr_column_avg']:.3f};ml={s['cr_ml_avg']:.3f};"
+          f"dump={s['cr_dump_avg']:.3f};"
           f"all={s['cr_all_avg']:.3f};bdi={s['cr_bdi_avg']:.3f};"
           f"paper_c={s['paper_c']};paper_java={s['paper_java']}")
     return cells, s

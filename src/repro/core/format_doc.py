@@ -1,0 +1,145 @@
+"""Generator for the ``docs/FORMAT.md`` worked example.
+
+``python -m repro.core.format_doc`` prints the worked-example block that
+is pasted verbatim into ``docs/FORMAT.md`` between the BEGIN/END markers.
+``tests/test_format_doc.py`` re-runs this module and asserts the doc
+block is byte-identical to a **live** :func:`repro.core.gbdi_fr.fr_encode`
+of the same page — the spec cannot drift from the code.
+
+:func:`serialize_page` is also the normative byte layout of one encoded
+page (the blob dict's arrays laid end-to-end), which ``FRConfig.
+compressed_bytes_per_page`` sizes but nothing else in the repo needed to
+materialise until the spec did.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.format import BaseTable
+from repro.core.gbdi_fr import FRConfig, fr_encode
+
+
+def example_config() -> FRConfig:
+    """Doc-sized config: smallest legal page (128 words), two bases, both
+    width classes, tiny buckets so the spill chain and a drop both fire."""
+    return FRConfig(word_bits=16, page_words=128, num_bases=2,
+                    width_set=(4, 8), bucket_caps=(8, 24), outlier_cap=4)
+
+
+def example_table() -> BaseTable:
+    import jax.numpy as jnp
+
+    return BaseTable(jnp.asarray([1000, 1040], jnp.int32),
+                     jnp.asarray([4, 8], jnp.int32))
+
+
+def example_page() -> np.ndarray:
+    """128 int32 word patterns; only the first 64 are live (a '64-word'
+    worked page inside the smallest legal 128-word frame).
+
+    Constructed to fire every format rule: 10 class-0 words against an
+    8-slot bucket (2 spill), class-1 words, zeros, and 5 outliers against
+    a 4-slot table (1 drop).
+    """
+    x = np.zeros(128, np.int32)
+    x[0:10] = 1000 + np.array([0, 1, -1, 2, -2, 3, -3, 4, -4, 5])
+    x[10:20] = 1040 + np.array([10, -20, 30, -40, 50, -60, 70, -80, 90, -100])
+    x[20:25] = [0x7ABC, 0x7DEF, 0x6123, 0x5456, 0x4789]   # 5 outliers, cap 4
+    x[32:40] = 1040 + np.array([99, 98, 97, 96, -99, -98, -97, -96])
+    x[48] = 1000 + 7
+    x[49] = 1040 - 128
+    return x
+
+
+def encode_example():
+    cfg = example_config()
+    blob = fr_encode(example_page()[None, :].astype(np.int32),
+                     example_table(), cfg)
+    return cfg, {k: np.asarray(v)[0] for k, v in blob.items()}
+
+
+def serialize_page(blob: dict, cfg: FRConfig) -> bytes:
+    """Normative byte layout of one encoded page:
+
+    ``ptrs`` int32 lanes | ``deltas`` int32 lanes | ``out_vals`` at
+    word_bits each | ``out_idx`` as uint16 | ``n_out`` as uint32 — all
+    little-endian; exactly ``cfg.compressed_bytes_per_page()`` bytes.
+    (``n_spilled``/``n_dropped`` are side-band diagnostics, not stored.)
+    """
+    val_dt = "<u2" if cfg.word_bits == 16 else "<u4"
+    mask = (1 << cfg.word_bits) - 1
+    out = b"".join([
+        np.asarray(blob["ptrs"], np.int32).astype("<i4").tobytes(),
+        np.asarray(blob["deltas"], np.int32).astype("<i4").tobytes(),
+        (np.asarray(blob["out_vals"], np.int64) & mask).astype(val_dt).tobytes(),
+        np.asarray(blob["out_idx"], np.uint16).astype("<u2").tobytes(),
+        np.asarray(blob["n_out"], np.uint32).astype("<u4").tobytes(),
+    ])
+    assert len(out) == cfg.compressed_bytes_per_page(), len(out)
+    return out
+
+
+def _rows(arr, per, fmt):
+    arr = np.asarray(arr).reshape(-1)
+    return [
+        f"  [{i:>3}..{min(i + per, arr.size) - 1:>3}] "
+        + " ".join(fmt(v) for v in arr[i:i + per])
+        for i in range(0, arr.size, per)
+    ]
+
+
+def worked_example() -> str:
+    cfg, blob = encode_example()
+    x = example_page()
+    lines = [
+        "config : word_bits=16 page_words=128 num_bases=2 width_set=(4, 8)",
+        "         bucket_caps=(8, 24) outlier_cap=4",
+        f"derived: ptr_bits={cfg.ptr_bits} ptr_lanes={cfg.ptr_lanes} "
+        f"class_lanes={cfg.class_lanes} delta_lanes={cfg.delta_lanes}",
+        f"         compressed_bytes_per_page={cfg.compressed_bytes_per_page()} "
+        f"bits_per_word={cfg.bits_per_word():.2f} ratio={cfg.ratio():.2f}",
+        "table  : bases=[1000, 1040] widths=[4, 8]  "
+        "(codes: 0, 1; zero=2, outlier=3)",
+        "",
+        "input words (int32 view of 16-bit patterns; [64..127] all zero):",
+        *_rows(x[:64], 16, lambda v: f"{int(v):>6}"),
+        "",
+        "per-word codes (unpacked from ptrs; 2 bits each):",
+        *_rows(np.asarray(_unpacked_codes(blob, cfg))[:64], 32,
+               lambda v: str(int(v))),
+        f"counters: n_out={int(blob['n_out'])} "
+        f"n_spilled={int(blob['n_spilled'])} n_dropped={int(blob['n_dropped'])}",
+        "",
+        f"ptrs   ({cfg.ptr_lanes} int32 lanes):",
+        *_rows(blob["ptrs"], 8, lambda v: f"0x{int(np.uint32(v)):08x}"),
+        f"deltas ({cfg.delta_lanes} int32 lanes; class0 lanes "
+        f"[0..{cfg.class_lanes[0] - 1}], class1 "
+        f"[{cfg.class_lane_offsets[1]}..{cfg.delta_lanes - 1}]):",
+        *_rows(blob["deltas"], 8, lambda v: f"0x{int(np.uint32(v)):08x}"),
+        f"out_vals = {[int(v) for v in blob['out_vals']]}   "
+        f"out_idx = {[int(v) for v in blob['out_idx']]}",
+        "",
+        f"serialized page ({cfg.compressed_bytes_per_page()} bytes: "
+        "ptrs | deltas | out_vals | out_idx | n_out):",
+        *_hexdump(serialize_page(blob, cfg)),
+    ]
+    return "\n".join(lines)
+
+
+def _unpacked_codes(blob, cfg):
+    from repro.core.gbdi_fr import unpack_lanes
+    import jax.numpy as jnp
+
+    return np.asarray(unpack_lanes(jnp.asarray(blob["ptrs"]), cfg.ptr_bits,
+                                   cfg.page_words))
+
+
+def _hexdump(data: bytes) -> list[str]:
+    return [
+        f"  {i:04x}  " + " ".join(f"{b:02x}" for b in data[i:i + 16])
+        for i in range(0, len(data), 16)
+    ]
+
+
+if __name__ == "__main__":
+    print(worked_example())

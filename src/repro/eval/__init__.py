@@ -7,14 +7,20 @@ testable for every codec in the repo:
 * :mod:`repro.eval.registry` — ``WorkloadRegistry`` / ``CodecRegistry``
   plus the dataclasses they hand out;
 * :mod:`repro.eval.workloads` — the default registry: all synthetic
-  memory-dump families from :mod:`repro.data.workloads` plus ML-tensor
+  memory-dump families from :mod:`repro.data.workloads`, ML-tensor
   families (model weights, AdamW moments, gradients, KV-cache pages)
-  derived from the live :mod:`repro.models` stack;
+  derived from the live :mod:`repro.models` stack, and any real
+  ``dump:<name>`` images found in the dump directory;
+* :mod:`repro.eval.ingest` — real-dump ingestion: ELF cores, tensor
+  files and live captures become dynamic ``dump:<name>`` families
+  (``python -m repro.eval.ingest``, see ``docs/INGEST.md``);
 * :mod:`repro.eval.codecs` — ``fit/encode/decode/size_bits`` adapters over
-  the host GBDI codec, the B∆I baseline, and GBDI-FR (jnp oracle and
-  Pallas-kernel backends);
-* :mod:`repro.eval.run` — the CLI:
-  ``python -m repro.eval.run --suite all --codec gbdi,bdi,fr``.
+  the host GBDI codec, the B∆I baseline, and GBDI-FR in all three
+  backends (jnp oracle ``fr``, compiled batched ``fr_xla``, Pallas
+  ``fr_kernel``), plus the dtype -> word-size framing rule;
+* :mod:`repro.eval.run` — the CLI: default eval, ``--sweep`` Pareto and
+  ``--throughput`` perf-baseline modes
+  (``python -m repro.eval.run --suite all``, see ``docs/BENCHMARKS.md``).
 
 Every cell (workload x codec) is roundtrip-verified; lossless codecs must
 be bit-exact, the fixed-rate codec must be exact outside dropped outliers.

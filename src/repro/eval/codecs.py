@@ -15,6 +15,11 @@ The adapter contract (duck-typed, see :class:`repro.eval.registry.CodecRegistry`
 * ``lossless`` — whether bit-exact roundtrip is *guaranteed* (GBDI-FR is
   only capacity-bounded lossless: cells report ``dropped_words`` and the
   verifier checks mismatches are confined to dropped outliers).
+
+This module also owns the dtype -> word-size framing rule
+(:func:`word_bits_for_dtype`) shared by the ML families and the
+real-dump ingestion path, so a bf16 checkpoint and a bf16 live capture
+frame identically.
 """
 from __future__ import annotations
 
@@ -26,6 +31,19 @@ import numpy as np
 from repro.core import bdi, gbdi
 from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode
 from repro.eval.registry import CodecRegistry
+
+
+def word_bits_for_dtype(dtype) -> int:
+    """Natural codec word size for a tensor dtype, by bit pattern.
+
+    2-byte dtypes (bf16/fp16/int16) frame as 16-bit words — the serving
+    and gradient-transport distributions; everything else frames as the
+    paper's 32-bit memory words (8-byte values split into word pairs, the
+    same view :func:`repro.core.gbdi.to_words` takes of a raw dump).
+    Accepts numpy dtypes, jax dtypes, and ml_dtypes names like
+    ``'bfloat16'``.
+    """
+    return 16 if np.dtype(dtype).itemsize == 2 else 32
 
 
 @dataclasses.dataclass

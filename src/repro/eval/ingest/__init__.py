@@ -1,0 +1,60 @@
+"""Real-dump workload ingestion: memory images -> registry families.
+
+The synthetic families in :mod:`repro.eval.workloads` reproduce documented
+*value structure*; this package feeds the eval subsystem the real thing.
+Any supported input — an ELF core dump, a ``.npy``/``.npz``/raw-binary
+tensor file, a pickled JAX pytree, or a live capture — normalises into
+one on-disk container (:class:`DumpImage`, a ``.npz``) and registers as a
+dynamic ``dump:<name>`` family usable by every ``repro.eval.run`` mode
+(default eval, ``--sweep``, ``--throughput``) and benchmark.
+
+CLI::
+
+  python -m repro.eval.ingest core.1234 --dump-dir experiments/dumps
+  python -m repro.eval.ingest weights.npy params.pkl
+  python -m repro.eval.ingest --list
+  python -m repro.eval.run --suite dump          # evaluate what you ingested
+
+See ``docs/INGEST.md`` for the full pipeline and safety notes.
+"""
+from repro.eval.ingest.capture import capture_process, capture_pytree
+from repro.eval.ingest.chunker import (
+    DEFAULT_DUMP_DIR,
+    DUMP_KIND,
+    DUMP_PREFIX,
+    default_dump_dir,
+    dump_workload,
+    sample_stream,
+    scan_dump_dir,
+)
+from repro.eval.ingest.container import DumpImage, Segment, load_meta
+from repro.eval.ingest.elf import is_elf, read_elf_core
+from repro.eval.ingest.tensors import (
+    read_npy,
+    read_npz,
+    read_pytree_pickle,
+    read_raw,
+    read_tensor_file,
+)
+
+__all__ = [
+    "DEFAULT_DUMP_DIR",
+    "DUMP_KIND",
+    "DUMP_PREFIX",
+    "DumpImage",
+    "Segment",
+    "capture_process",
+    "capture_pytree",
+    "default_dump_dir",
+    "dump_workload",
+    "is_elf",
+    "load_meta",
+    "read_elf_core",
+    "read_npy",
+    "read_npz",
+    "read_pytree_pickle",
+    "read_raw",
+    "read_tensor_file",
+    "sample_stream",
+    "scan_dump_dir",
+]

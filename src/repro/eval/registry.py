@@ -1,14 +1,17 @@
 """Registries binding workloads to codecs under one measurement protocol.
 
 A *workload* is a named generator of a word stream with a documented value
-structure (``kind`` groups families the way the paper's figures do: C,
-Java, Column, ML).  A *codec* is anything exposing the four-method
+structure.  ``kind`` groups families the way the paper's figures do — C,
+Java and Column synthetic dumps, ML for live model tensors — plus ``Dump``
+for real memory images registered dynamically by
+:mod:`repro.eval.ingest` (``dump:<name>`` families from ELF cores, tensor
+files, or live captures).  A *codec* is anything exposing the four-method
 ``fit/encode/decode/size_bits`` protocol (:mod:`repro.eval.codecs`).
 
 Both registries are plain dicts with validation — the point is that
 ``repro.eval.run`` and every benchmark iterate the *same* tables, so a new
 family or codec added here shows up everywhere (CLI, bench_compression,
-tests) with roundtrip verification for free.
+bench_throughput, tests) with roundtrip verification for free.
 """
 from __future__ import annotations
 
@@ -29,7 +32,7 @@ class Workload:
     """
 
     name: str
-    kind: str                                   # "C" | "Java" | "Column" | "ML"
+    kind: str                     # "C" | "Java" | "Column" | "ML" | "Dump"
     generate: Callable[[int, int], np.ndarray]  # (n_bytes, seed) -> array
     word_bits: int = 32
     description: str = ""
@@ -63,7 +66,12 @@ class WorkloadRegistry:
         return sorted({w.kind for w in self._workloads.values()})
 
     def select(self, suite: str) -> list[Workload]:
-        """``all`` or a comma list of kinds and/or workload names."""
+        """``all`` or a comma list of kinds and/or workload names.
+
+        Kinds match case-insensitively (``dump`` selects every registered
+        ``dump:<name>`` family); anything that is not a kind must be an
+        exact workload name.
+        """
         if suite == "all":
             return list(self._workloads.values())
         out: list[Workload] = []

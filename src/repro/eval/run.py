@@ -7,6 +7,13 @@
       --json experiments/BENCH_sweep.json
   PYTHONPATH=src python -m repro.eval.run --throughput \
       --json experiments/BENCH_throughput.json
+  PYTHONPATH=src python -m repro.eval.run --suite dump --dump-dir d/ \
+      # real images ingested with `python -m repro.eval.ingest`
+
+Real memory images (ELF cores, tensor files, live captures) registered by
+:mod:`repro.eval.ingest` appear as ``dump:<name>`` families of kind
+``Dump`` and run through every mode below exactly like the synthetic
+families; ``--dump-dir`` (or ``$REPRO_DUMP_DIR``) says where to scan.
 
 Per cell the runner fits, encodes, decodes, **verifies the roundtrip**
 (bit-exact for lossless codecs; for the fixed-rate codec, mismatching
@@ -453,8 +460,12 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--suite", default="all",
-                    help="'all', or comma list of kinds (c,java,column,ml) "
-                         "and/or workload names")
+                    help="'all', or comma list of kinds (c,java,column,ml,"
+                         "dump) and/or workload names (incl. dump:<name>)")
+    ap.add_argument("--dump-dir", default=None,
+                    help="directory of ingested dump containers to register "
+                         "as dump:<name> families (default: $REPRO_DUMP_DIR "
+                         "or experiments/dumps)")
     ap.add_argument("--codec", default=None,
                     help="comma list from: gbdi, bdi, fr, fr_xla, fr_kernel "
                          "(fr_xla is the compiled batched CPU/GPU path; "
@@ -486,7 +497,8 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
         kernel_n_bytes = min(KERNEL_N_BYTES, n_bytes)
         try:
             rows = throughput(
-                default_workloads(), default_codecs(), suite=args.suite
+                default_workloads(args.dump_dir), default_codecs(),
+                suite=args.suite
                 if args.suite != "all" else "", codecs=codecs,
                 n_bytes=n_bytes, kernel_n_bytes=kernel_n_bytes,
                 repeats=repeats, seed=args.seed,
@@ -521,7 +533,8 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
         # orders of magnitude slower and its MB/s is not a CPU datapoint
         backend = "kernel" if args.codec and "fr_kernel" in args.codec else "ref"
         try:
-            rows = sweep(default_workloads(), suite=args.suite, backend=backend,
+            rows = sweep(default_workloads(args.dump_dir), suite=args.suite,
+                         backend=backend,
                          n_bytes=args.n_bytes, seed=args.seed,
                          verify=not args.no_verify)
         except KeyError as e:
@@ -542,7 +555,7 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
 
     try:
         cells = evaluate(
-            default_workloads(), default_codecs(),
+            default_workloads(args.dump_dir), default_codecs(),
             suite=args.suite, codecs=args.codec or "gbdi,bdi,fr,fr_xla,fr_kernel",
             n_bytes=args.n_bytes, seed=args.seed, verify=not args.no_verify,
             repeats=args.repeats if args.repeats is not None else 3,

@@ -1,8 +1,12 @@
-"""The default workload table: memory dumps + ML-tensor families.
+"""The default workload table: synthetic dumps + ML tensors + real dumps.
 
-Dump families (C/Java/Column kinds) come straight from
-:mod:`repro.data.workloads`.  The ML families below extend the paper's
-"broader range of workloads" to the tensors this repo actually serves:
+Synthetic families (C/Java/Column kinds) come straight from
+:mod:`repro.data.workloads`; real memory images ingested via
+:mod:`repro.eval.ingest` join as dynamic ``dump:<name>`` families (kind
+``Dump``) whenever the dump directory — ``--dump-dir``,
+``$REPRO_DUMP_DIR``, or ``experiments/dumps`` — holds containers.  The ML
+families below extend the paper's "broader range of workloads" to the
+tensors this repo actually serves:
 
 * ``ml_weights_fp32`` / ``ml_weights_bf16`` — real initialised weights of
   the reduced transformer stack (:mod:`repro.models`), flattened by bit
@@ -112,7 +116,11 @@ _ML_FAMILIES = [
 ]
 
 
-def default_workloads() -> WorkloadRegistry:
+def default_workloads(dump_dir: str | None = None) -> WorkloadRegistry:
+    """The full registry: synthetic families, ML tensors, and any real
+    ``dump:<name>`` families found under ``dump_dir`` (default:
+    ``$REPRO_DUMP_DIR`` or ``experiments/dumps``; a missing directory just
+    means no Dump kind)."""
     reg = WorkloadRegistry()
     for name, (kind, fn) in dump_workloads.WORKLOADS.items():
         reg.register(
@@ -128,4 +136,8 @@ def default_workloads() -> WorkloadRegistry:
         reg.register(
             Workload(name=name, kind="ML", generate=fn, word_bits=wb, description=desc)
         )
+    from repro.eval import ingest
+
+    ingest.scan_dump_dir(reg, dump_dir if dump_dir is not None
+                         else ingest.default_dump_dir())
     return reg

@@ -1,0 +1,151 @@
+"""Miniature ingestion corpus: tiny synthetic inputs in real file formats.
+
+Everything the ingest subsystem can read, built deterministically and
+small (<64 KiB per file) so tests and the CI ``ingest-smoke`` step
+generate the corpus on the fly instead of checking binaries into git:
+
+* a synthetic **ELF64 core dump** (real ELF header + program headers +
+  PT_LOAD segments whose contents mimic a C heap: pointer structs, small
+  ints, zero pages, C strings) — in either byte order;
+* ``.npy`` (bf16 weights-like), ``.npz`` (mixed fp32/int64 column pair),
+  raw ``.bin`` (uint32 counters), and a pickled nested pytree of arrays.
+
+Determinism contract: byte-identical output for a fixed seed (golden
+CRCs asserted in ``tests/test_ingest.py``).  Also runnable as a script:
+``python tests/ingest_corpus.py OUTDIR`` writes the full corpus.
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+import sys
+from pathlib import Path
+
+import numpy as np
+
+ET_CORE = 4
+PT_LOAD = 1
+EM_X86_64 = 62
+
+
+def _heap_words(rng) -> np.ndarray:
+    """C-heap value structure: {ptr64, ptr64, int, int} node structs +
+    zero pages, like the paper's SPEC dumps (cf. repro.data.workloads)."""
+    n = 1024
+    heap = np.uint64(0x7F3A_0000_0000)
+    ptrs = heap + rng.integers(0, 1 << 26, n).astype(np.uint64) * 16
+    rec = np.empty((n, 4), np.uint32)
+    rec[:, 0] = (ptrs & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    rec[:, 1] = (ptrs >> np.uint64(32)).astype(np.uint32)
+    rec[:, 2:] = rng.integers(0, 4000, (n, 2)).astype(np.int32).view(np.uint32)
+    return np.concatenate([rec.reshape(-1), np.zeros(512, np.uint32)])
+
+
+def _data_words(rng) -> np.ndarray:
+    """.data-ish: C strings + monotone counters."""
+    text = np.frombuffer(
+        (b"gbdi-workload-%04d\x00" % 7) * 96, np.uint8)[: 96 * 16]
+    counts = np.cumsum(rng.integers(1, 9, 512)).astype(np.uint32)
+    return np.concatenate([
+        np.frombuffer(text.tobytes().ljust(96 * 16 + (-96 * 16) % 4, b"\0"),
+                      np.uint32), counts])
+
+
+def _stack_words(rng) -> np.ndarray:
+    """Stack-ish: return addresses in one text region + saved registers."""
+    ra = (0x4010_0000 + rng.integers(0, 1 << 16, 256) * 4).astype(np.uint32)
+    regs = rng.integers(0, 1 << 8, 256).astype(np.uint32)
+    return np.concatenate([ra, regs, np.zeros(128, np.uint32)])
+
+
+def build_elf_core(path: str | Path, *, seed: int = 0,
+                   endian: str = "little") -> Path:
+    """A minimal but structurally honest ELF64 core (<64 KiB)."""
+    path = Path(path)
+    end = "<" if endian == "little" else ">"
+    rng = np.random.default_rng(seed)
+    seg_words = [_heap_words(rng), _data_words(rng), _stack_words(rng)]
+    vaddrs = [0x7F3A_0000_0000, 0x0060_3000, 0x7FFC_F000_0000]
+    flags = [6, 6, 6]  # rw-
+
+    ehsize, phentsize, phnum = 64, 56, len(seg_words)
+    off = ehsize + phentsize * phnum
+    phdrs, blobs = [], []
+    for words, vaddr, flag in zip(seg_words, vaddrs, flags):
+        blob = words.astype("<u4" if endian == "little" else ">u4").tobytes()
+        phdrs.append(struct.pack(end + "IIQQQQQQ", PT_LOAD, flag, off, vaddr,
+                                 vaddr, len(blob), len(blob), 0x1000))
+        blobs.append(blob)
+        off += len(blob)
+
+    ident = b"\x7fELF" + bytes([2, 1 if endian == "little" else 2, 1]) + bytes(9)
+    ehdr = ident + struct.pack(end + "HHIQQQIHHHHHH", ET_CORE, EM_X86_64, 1,
+                               0, ehsize, 0, 0, ehsize, phentsize, phnum,
+                               0, 0, 0)
+    path.write_bytes(ehdr + b"".join(phdrs) + b"".join(blobs))
+    assert path.stat().st_size < 64 << 10
+    return path
+
+
+def build_npy_bf16(path: str | Path, *, seed: int = 0) -> Path:
+    """bf16 weights-like array (needs ml_dtypes, a jax dependency)."""
+    import ml_dtypes
+
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((64, 96)) * 0.05).astype(ml_dtypes.bfloat16)
+    np.save(Path(path), w)
+    return Path(path)
+
+
+def build_npz(path: str | Path, *, seed: int = 0) -> Path:
+    """Column-store-like pair: fp32 measures + int64 surrogate keys."""
+    rng = np.random.default_rng(seed)
+    prices = rng.lognormal(7.5, 1.0, 2048).astype(np.float32)
+    keys = (np.int64(1) << 40) + np.cumsum(
+        rng.integers(1, 64, 2048).astype(np.int64))
+    np.savez(Path(path), prices=prices, keys=keys)
+    return Path(path)
+
+
+def build_bin(path: str | Path, *, seed: int = 0) -> Path:
+    rng = np.random.default_rng(seed)
+    counts = np.minimum(rng.zipf(1.6, 4096), 1 << 20).astype(np.uint32)
+    Path(path).write_bytes(counts.tobytes())
+    return Path(path)
+
+
+def build_pytree_pickle(path: str | Path, *, seed: int = 0) -> Path:
+    """Nested params-like pytree (plain numpy so it unpickles anywhere)."""
+    rng = np.random.default_rng(seed)
+    tree = {
+        "embed": {"w": (rng.standard_normal((128, 32)) * 0.02).astype(np.float32)},
+        "layers": [
+            {"attn": rng.standard_normal((32, 32)).astype(np.float32) * 0.1,
+             "bias": np.zeros(32, np.float32)}
+            for _ in range(2)
+        ],
+    }
+    with open(path, "wb") as f:
+        pickle.dump(tree, f)
+    return Path(path)
+
+
+def build_corpus(out_dir: str | Path, *, seed: int = 0) -> dict[str, Path]:
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    return {
+        "elf": build_elf_core(out / "mini_core.elf", seed=seed),
+        "elf_be": build_elf_core(out / "mini_core_be.elf", seed=seed,
+                                 endian="big"),
+        "npy": build_npy_bf16(out / "weights_bf16.npy", seed=seed),
+        "npz": build_npz(out / "columns.npz", seed=seed),
+        "bin": build_bin(out / "counters.bin", seed=seed),
+        "pytree": build_pytree_pickle(out / "params.pkl", seed=seed),
+    }
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        raise SystemExit("usage: python tests/ingest_corpus.py OUTDIR")
+    for kind, p in build_corpus(sys.argv[1]).items():
+        print(f"{kind:<8} {p}  {p.stat().st_size} B")

@@ -1,0 +1,95 @@
+"""Docs cannot rot: every docs/ page is linked from README, relative
+links resolve, and every ``repro.*`` symbol / repo file path a doc
+mentions actually exists.  Grep-based by design (cheap enough for CI);
+also runnable standalone: ``python tests/test_docs.py``."""
+import importlib
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
+
+_FENCE = re.compile(r"^```.*?^```", re.S | re.M)
+_INLINE = re.compile(r"`([^`\n]+)`")
+_MDLINK = re.compile(r"\]\(([^)#]+)\)")
+_SYMBOL = re.compile(r"^repro(\.\w+)+$")
+_REPO_PATH = re.compile(
+    r"^(src|tests|benchmarks|docs|examples|experiments|\.github)/[\w./-]+"
+    r"\.(py|md|json|yml)$")
+
+
+def _prose(md: Path) -> str:
+    """Doc text with fenced code blocks removed (they hold generated
+    output and shell transcripts, not normative references)."""
+    return _FENCE.sub("", md.read_text())
+
+
+def _doc_pages():
+    pages = sorted(DOCS.glob("*.md"))
+    assert pages, "docs/ tree is empty"
+    return pages
+
+
+def test_every_doc_is_linked_from_readme():
+    readme = (ROOT / "README.md").read_text()
+    missing = [p.name for p in _doc_pages() if f"docs/{p.name}" not in readme]
+    assert not missing, f"docs pages not linked from README: {missing}"
+
+
+def test_relative_links_resolve():
+    bad = []
+    for page in [*_doc_pages(), ROOT / "README.md"]:
+        for target in _MDLINK.findall(_prose(page)):
+            if "://" in target:
+                continue
+            if not (page.parent / target).exists():
+                bad.append(f"{page.name} -> {target}")
+    assert not bad, f"dangling markdown links: {bad}"
+
+
+def test_no_stale_symbols_or_paths():
+    """Every inline-code ``repro.x.y[.attr]`` must import/resolve, and
+    every inline-code repo file path must exist on disk."""
+    bad = []
+    for page in _doc_pages():
+        for tok in _INLINE.findall(_prose(page)):
+            tok = tok.strip()
+            if _REPO_PATH.match(tok):
+                if not (ROOT / tok).exists():
+                    bad.append(f"{page.name}: missing file {tok}")
+            elif _SYMBOL.match(tok):
+                if not _resolves(tok):
+                    bad.append(f"{page.name}: stale symbol {tok}")
+    assert not bad, "\n".join(bad)
+
+
+def _resolves(dotted: str) -> bool:
+    parts = dotted.split(".")
+    for split in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:split]))
+        except ModuleNotFoundError:
+            continue
+        try:
+            for attr in parts[split:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, str(ROOT / "src"))
+    failures = 0
+    for check in (test_every_doc_is_linked_from_readme,
+                  test_relative_links_resolve,
+                  test_no_stale_symbols_or_paths):
+        try:
+            check()
+            print(f"ok   {check.__name__}")
+        except AssertionError as e:
+            failures += 1
+            print(f"FAIL {check.__name__}: {e}")
+    sys.exit(1 if failures else 0)

@@ -1,0 +1,47 @@
+"""docs/FORMAT.md cannot rot: the worked-example block must be
+byte-identical to a live encode, and the example page must roundtrip."""
+import re
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import format_doc
+from repro.core.gbdi_fr import fr_decode, fr_encode
+
+DOC = Path(__file__).resolve().parent.parent / "docs" / "FORMAT.md"
+_BLOCK = re.compile(
+    r"<!-- BEGIN WORKED EXAMPLE[^>]*-->\n```text\n(.*?)\n```\n"
+    r"<!-- END WORKED EXAMPLE -->", re.S)
+
+
+def test_doc_worked_example_matches_live_encode():
+    m = _BLOCK.search(DOC.read_text())
+    assert m, "FORMAT.md worked-example markers missing"
+    assert m.group(1) == format_doc.worked_example(), (
+        "docs/FORMAT.md worked example is stale — regenerate with "
+        "`python -m repro.core.format_doc` and paste between the markers")
+
+
+def test_example_page_roundtrips_outside_drops():
+    cfg = format_doc.example_config()
+    x = format_doc.example_page()[None, :].astype(np.int32)
+    blob = fr_encode(x, format_doc.example_table(), cfg)
+    assert int(np.asarray(blob["n_spilled"])[0]) == 4
+    assert int(np.asarray(blob["n_dropped"])[0]) == 1
+    got = np.asarray(fr_decode(blob, format_doc.example_table(), cfg))[0]
+    mism = np.nonzero(got != x[0])[0]
+    assert mism.size == 1 and got[mism[0]] == 0    # exactly the dropped word
+
+
+def test_serialized_page_is_fixed_rate():
+    cfg, blob = format_doc.encode_example()
+    page = format_doc.serialize_page(blob, cfg)
+    assert len(page) == cfg.compressed_bytes_per_page() == 80
+    # zero page serializes deterministically (all-zero codes lane = zero_code
+    # pattern, empty buckets zero-filled)
+    zero_blob = {k: np.asarray(v)[0] for k, v in fr_encode(
+        np.zeros((1, cfg.page_words), np.int32), format_doc.example_table(),
+        cfg).items()}
+    a = format_doc.serialize_page(zero_blob, cfg)
+    b = format_doc.serialize_page(zero_blob, cfg)
+    assert a == b and len(a) == 80

@@ -1,0 +1,335 @@
+"""Real-dump ingestion: ELF parsing goldens, container roundtrips,
+deterministic sampling, dtype-aware word framing, capture helpers, and the
+``dump:<name>`` registry families end-to-end through the default codecs."""
+import pickle
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from ingest_corpus import build_corpus, build_elf_core  # noqa: E402
+
+from repro.eval import ingest
+from repro.eval.codecs import default_codecs, word_bits_for_dtype
+from repro.eval.run import evaluate, evaluate_cell
+from repro.eval.workloads import default_workloads
+
+# golden digests of the seed-0 corpus (builder determinism contract):
+# regenerate with  python - <<'EOF' ... ingest_corpus.build_corpus ... EOF
+ELF_STREAM32_CRC = 879124886
+ELF_SAMPLE_CRC = 1732732888  # sample_stream(img, 8192, seed=3)
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    return build_corpus(tmp_path_factory.mktemp("corpus"), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# corpus builder + ELF reader
+# ---------------------------------------------------------------------------
+
+def test_corpus_small_and_deterministic(corpus, tmp_path):
+    again = build_corpus(tmp_path / "again", seed=0)
+    for kind, p in corpus.items():
+        assert p.stat().st_size < 64 << 10, (kind, p.stat().st_size)
+        assert p.read_bytes() == again[kind].read_bytes(), kind
+
+
+def test_elf_core_golden(corpus):
+    img = ingest.read_elf_core(corpus["elf"])
+    assert img.meta["format"] == "elf"
+    assert img.meta["elf_class"] == 64 and img.meta["elf_type"] == "ET_CORE"
+    assert [(s.vaddr, s.n_bytes) for s in img.segments] == [
+        (0x7F3A_0000_0000, 18432), (0x0060_3000, 3584),
+        (0x7FFC_F000_0000, 2560)]
+    assert all(s.note == "perms=rw-" for s in img.segments)
+    assert zlib.crc32(img.word_stream(32).tobytes()) == ELF_STREAM32_CRC
+    assert zlib.crc32(
+        ingest.sample_stream(img, 8192, 3).tobytes()) == ELF_SAMPLE_CRC
+    # reframing a little-endian image at the other word size is a pure
+    # reinterpretation: same bytes, different view
+    np.testing.assert_array_equal(img.word_stream(16).view(np.uint8),
+                                  img.word_stream(32).view(np.uint8))
+
+
+def test_elf_big_endian_same_logical_words(corpus):
+    """A BE core of the same logical 32-bit words streams identically —
+    byte order is an image property, not a workload property.  (16-bit
+    reframing of a 32-bit-word BE image is *not* order-invariant: the
+    halfwords inside each word swap; frame BE images at their natural
+    word size.)"""
+    le = ingest.read_elf_core(corpus["elf"])
+    be = ingest.read_elf_core(corpus["elf_be"])
+    assert be.endian == "big" and le.endian == "little"
+    np.testing.assert_array_equal(le.word_stream(32), be.word_stream(32))
+
+
+def test_elf_rejects_non_elf_and_truncated(tmp_path, corpus):
+    bad = tmp_path / "not_elf.bin"
+    bad.write_bytes(b"definitely not an elf file")
+    with pytest.raises(ValueError, match="magic"):
+        ingest.read_elf_core(bad)
+    assert not ingest.is_elf(bad) and ingest.is_elf(corpus["elf"])
+    trunc = tmp_path / "trunc.elf"
+    trunc.write_bytes(corpus["elf"].read_bytes()[: 64 + 56 * 3 + 100])
+    with pytest.raises(ValueError, match="EOF"):
+        ingest.read_elf_core(trunc)
+
+
+def test_elf_max_bytes_caps_container(corpus):
+    img = ingest.read_elf_core(corpus["elf"], max_bytes=4096)
+    assert img.n_bytes == 4096
+
+
+# ---------------------------------------------------------------------------
+# container + chunker
+# ---------------------------------------------------------------------------
+
+def test_container_roundtrip_and_lazy_meta(corpus, tmp_path):
+    img = ingest.read_elf_core(corpus["elf"])
+    path = img.save(tmp_path / "core.npz")
+    back = ingest.DumpImage.load(path)
+    assert [s.name for s in back.segments] == [s.name for s in img.segments]
+    assert [s.vaddr for s in back.segments] == [s.vaddr for s in img.segments]
+    np.testing.assert_array_equal(back.raw_bytes(), img.raw_bytes())
+    meta = ingest.load_meta(path)
+    assert meta["name"] == img.name and meta["n_bytes"] == img.n_bytes
+    assert meta["word_bits"] == 32 and meta["endian"] == "little"
+
+
+def test_sample_stream_tiles_pages_and_is_deterministic(corpus):
+    img = ingest.read_elf_core(corpus["elf"])
+    # deterministic in (image, n_bytes, seed); seed varies the page subset
+    a = ingest.sample_stream(img, 8192, 0)
+    np.testing.assert_array_equal(a, ingest.sample_stream(img, 8192, 0))
+    assert not np.array_equal(a, ingest.sample_stream(img, 8192, 1))
+    # under-budget sampling keeps whole pages of the original, address order
+    raw = img.word_stream(32)
+    pages = {raw[i:i + 1024].tobytes()
+             for i in range(0, raw.size - 1023, 1024)}
+    assert a[:1024].tobytes() in pages and a[1024:2048].tobytes() in pages
+    # over-budget requests tile (structure matters, length doesn't)
+    big = ingest.sample_stream(img, img.n_bytes * 2, 0)
+    assert big.view(np.uint8).size == img.n_bytes * 2
+    np.testing.assert_array_equal(big[: raw.size], raw)
+
+
+# ---------------------------------------------------------------------------
+# tensor ingestion: dtype-aware word framing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float16", "float32", "int16", "int32",
+                                   "int64", "uint8"])
+def test_npy_dtype_framing_bit_exact(tmp_path, dtype):
+    rng = np.random.default_rng(7)
+    arr = rng.integers(0, 200, 999).astype(dtype)
+    p = tmp_path / f"a_{dtype}.npy"
+    np.save(p, arr)
+    img = ingest.read_tensor_file(p)
+    expect_wb = 16 if np.dtype(dtype).itemsize == 2 else 32
+    assert word_bits_for_dtype(dtype) == expect_wb
+    assert img.word_bits == expect_wb
+    # framing is by bit pattern: stream bytes == array bytes (+ word pad)
+    raw = arr.view(np.uint8).reshape(-1)
+    got = img.word_stream().view(np.uint8)[: raw.size]
+    np.testing.assert_array_equal(got, raw)
+
+
+def test_npz_mixed_dtypes_majority_word_bits(tmp_path):
+    import ml_dtypes
+
+    big16 = np.zeros(4096, ml_dtypes.bfloat16)
+    small32 = np.ones(16, np.float32)
+    p = tmp_path / "mixed.npz"
+    np.savez(p, a=big16, b=small32)
+    img = ingest.read_npz(p)
+    assert img.word_bits == 16          # majority by bytes
+    assert ingest.read_npz(p, word_bits=32).word_bits == 32  # override wins
+    assert img.n_bytes == big16.nbytes + small32.nbytes
+
+
+def test_pytree_pickle_leaf_order_and_bytes(corpus):
+    img = ingest.read_pytree_pickle(corpus["pytree"])
+    names = [s.name for s in img.segments]
+    assert names[0].startswith("embed/w") and len(names) == 5
+    with open(corpus["pytree"], "rb") as f:
+        tree = pickle.load(f)
+    first = np.asarray(tree["embed"]["w"]).view(np.uint8).reshape(-1)
+    np.testing.assert_array_equal(img.segments[0].data, first)
+
+
+# ---------------------------------------------------------------------------
+# capture helpers
+# ---------------------------------------------------------------------------
+
+def test_capture_pytree_bf16_frames_16bit():
+    import jax.numpy as jnp
+
+    tree = {"kv": {"k": jnp.ones((8, 16), jnp.bfloat16),
+                   "v": jnp.zeros((8, 16), jnp.bfloat16)},
+            "pos": jnp.arange(8, dtype=jnp.int32)}
+    img = ingest.capture_pytree(tree, "live_kv")
+    assert img.word_bits == 16 and img.name == "live_kv"
+    assert {s.name.split("@")[0] for s in img.segments} == \
+        {"kv/k", "kv/v", "pos"}
+    assert img.n_bytes == 8 * 16 * 2 * 2 + 8 * 4
+
+
+def test_capture_process_is_opt_in(monkeypatch):
+    monkeypatch.delenv("REPRO_ALLOW_PROC_CAPTURE", raising=False)
+    with pytest.raises(PermissionError, match="opt-in"):
+        ingest.capture_process(1)
+
+
+def test_capture_own_process(tmp_path):
+    import os
+
+    if not Path("/proc/self/maps").exists():
+        pytest.skip("no /proc (not Linux)")
+    try:
+        img = ingest.capture_process(os.getpid(), allow=True,
+                                     max_bytes=1 << 20, name="self")
+    except PermissionError:
+        pytest.skip("ptrace over own pid denied in this sandbox")
+    assert img.n_bytes > 0 and img.meta["format"] == "proc"
+    # the snapshot is a real container: save + sample like any other dump
+    img.save(tmp_path / "self.npz")
+    words = ingest.sample_stream(ingest.DumpImage.load(tmp_path / "self.npz"),
+                                 4096, 0)
+    assert words.dtype == np.uint32 and words.size == 1024
+
+
+# ---------------------------------------------------------------------------
+# registry integration: dump:<name> families end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dump_dir(corpus, tmp_path_factory):
+    d = tmp_path_factory.mktemp("dumps")
+    ingest.read_elf_core(corpus["elf"]).save(d / "mini_core.npz")
+    ingest.read_tensor_file(corpus["npy"]).save(d / "weights_bf16.npz")
+    return d
+
+
+def test_default_workloads_pick_up_dump_dir(dump_dir):
+    reg = default_workloads(str(dump_dir))
+    names = reg.names()
+    assert "dump:mini_core" in names and "dump:weights_bf16" in names
+    dumps = reg.select("dump")
+    assert {w.name for w in dumps} == {"dump:mini_core", "dump:weights_bf16"}
+    assert all(w.kind == ingest.DUMP_KIND for w in dumps)
+    assert reg.get("dump:weights_bf16").word_bits == 16
+    # absent dir -> no Dump kind, everything else intact
+    assert "Dump" not in default_workloads("/no/such/dir").kinds()
+
+
+def test_dump_family_generate_deterministic(dump_dir):
+    wl = default_workloads(str(dump_dir)).get("dump:mini_core")
+    a = wl.generate(8192, 3)
+    np.testing.assert_array_equal(a, wl.generate(8192, 3))
+    assert zlib.crc32(a.tobytes()) == ELF_SAMPLE_CRC
+
+
+def test_dump_families_evaluate_through_default_codecs(dump_dir):
+    """The acceptance path: every default codec over an ingested family,
+    roundtrip-verified (fr_kernel runs interpret-mode on a small stream)."""
+    reg, codecs = default_workloads(str(dump_dir)), default_codecs()
+    wl = reg.get("dump:weights_bf16")
+    data = wl.generate(16384, 0)
+    for cname in ("gbdi", "bdi", "fr", "fr_xla", "fr_kernel"):
+        cell = evaluate_cell(wl, codecs.make(cname, wl.word_bits), data,
+                             repeats=1)
+        assert cell.verified, (cname, cell.error)
+        assert cell.kind == "Dump" and cell.word_bits == 16
+    cells = evaluate(reg, codecs, suite="dump:mini_core",
+                     codecs="gbdi,bdi,fr_xla", n_bytes=16384, repeats=1)
+    assert len(cells) == 3 and all(c.verified for c in cells), \
+        [c.error for c in cells]
+
+
+def test_scan_dump_dir_skips_garbage(dump_dir, tmp_path):
+    import shutil
+
+    d = tmp_path / "mixed"
+    d.mkdir()
+    shutil.copy(dump_dir / "mini_core.npz", d / "mini_core.npz")
+    np.savez(d / "not_a_dump.npz", x=np.arange(4))       # foreign artifact
+    from repro.eval.registry import WorkloadRegistry
+
+    reg = WorkloadRegistry()
+    with pytest.warns(UserWarning, match="not_a_dump"):
+        names = ingest.scan_dump_dir(reg, d)
+    assert names == ["dump:mini_core"]
+    with pytest.raises(ValueError, match="__meta__"):
+        ingest.scan_dump_dir(WorkloadRegistry(), d, strict=True)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_ingest_list_and_force(corpus, tmp_path, capsys):
+    from repro.eval.ingest.__main__ import main
+
+    d = tmp_path / "dumps"
+    fams = main([str(corpus["bin"]), str(corpus["npz"]),
+                 "--dump-dir", str(d)])
+    assert fams == ["dump:counters", "dump:columns"]
+    out = capsys.readouterr().out
+    assert "dump:counters" in out and "repro.eval.run --suite dump" in out
+    with pytest.raises(SystemExit, match="exists"):
+        main([str(corpus["bin"]), "--dump-dir", str(d)])
+    assert main([str(corpus["bin"]), "--dump-dir", str(d), "--force",
+                 "--name", "counters"]) == ["dump:counters"]
+    assert main(["--list", "--dump-dir", str(d)]) == []
+    assert "dump:columns" in capsys.readouterr().out
+    # and what the CLI wrote is what the registry serves
+    reg = default_workloads(str(d))
+    assert {"dump:counters", "dump:columns"} <= set(reg.names())
+
+
+def test_dump_names_must_be_safe_slugs(corpus, tmp_path):
+    """Names become filename stems and --suite tokens — no '/', ',' etc."""
+    from repro.eval.ingest.__main__ import main
+
+    for bad in ("sub/run1", "../esc", "a,b", ".hidden"):
+        with pytest.raises((ValueError, SystemExit), match="name"):
+            ingest.read_tensor_file(corpus["bin"], name=bad)
+    with pytest.raises(SystemExit, match="name"):
+        main([str(corpus["bin"]), "--name", "a,b",
+              "--dump-dir", str(tmp_path)])
+
+
+def test_cli_rejects_duplicate_stems_in_one_batch(corpus, tmp_path):
+    from repro.eval.ingest.__main__ import main
+
+    import shutil
+
+    other = tmp_path / "other"
+    other.mkdir()
+    shutil.copy(corpus["bin"], other / corpus["bin"].name)
+    with pytest.raises(SystemExit, match="duplicate"):
+        main([str(corpus["bin"]), str(other / corpus["bin"].name),
+              "--dump-dir", str(tmp_path / "d")])
+    assert not (tmp_path / "d" / "counters.npz").exists()  # nothing written
+
+
+def test_force_reingest_serves_fresh_bytes(tmp_path):
+    """The image LRU is keyed on (path, mtime, size): overwriting a
+    container (--force) must not serve the stale pre-force stream."""
+    import os
+
+    d = tmp_path / "dumps"
+    p1 = tmp_path / "w.npy"
+    np.save(p1, np.full(4096, 7, np.uint32))
+    ingest.read_tensor_file(p1, name="w").save(d / "w.npz")
+    a = default_workloads(str(d)).get("dump:w").generate(4096, 0)
+    np.save(p1, np.full(4096, 9, np.uint32))
+    ingest.read_tensor_file(p1, name="w").save(d / "w.npz")
+    os.utime(d / "w.npz", ns=(1, 1))   # defeat same-mtime-and-size aliasing
+    b = default_workloads(str(d)).get("dump:w").generate(4096, 0)
+    assert a[0] == 7 and b[0] == 9
