@@ -28,7 +28,9 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--codec", default=eval_run.THROUGHPUT_CODECS)
     ap.add_argument("--json", default="experiments/BENCH_throughput.json",
-                    help="artifact path ('' to skip writing)")
+                    help="artifact path ('' to skip writing); paths under "
+                         "experiments/ are mirrored to the repo root for "
+                         "BENCH_*.json trajectory tracking")
     ap.add_argument("--quick", action="store_true",
                     help="small streams / fewer repeats (CI smoke)")
     args = ap.parse_args(argv)

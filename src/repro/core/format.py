@@ -32,6 +32,9 @@ from repro.core.kmeans import delta_magnitude, wrapped_delta
 LANE_BITS = 32
 #: field widths that tile an int32 lane exactly (lane-packable)
 LANE_WIDTHS = (1, 2, 4, 8, 16)
+#: width of the per-page profile id stored when a config ships more than
+#: one bucket-cap profile (one byte in the serialized page header)
+PROFILE_ID_BITS = 8
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +120,60 @@ def class_indices(widths: jax.Array, width_set: Sequence[int]) -> jax.Array:
 # assignment
 # ---------------------------------------------------------------------------
 
+def validate_cap_profiles(
+    profiles: Sequence[Sequence[int]],
+    width_set: Sequence[int],
+    page_words: int,
+) -> tuple[tuple[int, ...], ...]:
+    """Validate a bucket-cap profile table against a width set.
+
+    Each profile pairs ``width_set`` one-to-one; every cap must be in
+    ``[0, page_words]`` and fill whole int32 lanes (``cap * w % 32 == 0``)
+    so sub-streams stay lane-packable under every profile.  Returns the
+    normalized tuple-of-tuples.  Profile ids are stored in
+    :data:`PROFILE_ID_BITS` bits, bounding the table at 256 entries.
+    """
+    norm = tuple(tuple(int(c) for c in p) for p in profiles)
+    if not norm:
+        raise ValueError("cap_profiles must hold at least one profile")
+    if len(norm) > (1 << PROFILE_ID_BITS):
+        raise ValueError(f"at most {1 << PROFILE_ID_BITS} cap profiles "
+                         f"(ids are {PROFILE_ID_BITS}-bit), got {len(norm)}")
+    for p, caps in enumerate(norm):
+        if len(caps) != len(width_set):
+            raise ValueError(f"profile {p} must pair width_set one-to-one")
+        for w, cap in zip(width_set, caps):
+            if not 0 <= cap <= page_words:
+                raise ValueError(f"profile {p}: cap {cap} outside [0, {page_words}]")
+            if cap * w % 32:
+                raise ValueError(f"profile {p}: cap {cap} x width {w} "
+                                 "must fill int32 lanes")
+    return norm
+
+
+def class_demand(code: jax.Array, cls: jax.Array, num_classes: int) -> jax.Array:
+    """Per-width-class demand histogram of one page's :func:`assign` output.
+
+    ``code`` — per-word codes (base index / zero / outlier); ``cls`` — the
+    per-base width-class indices (:func:`class_indices`).  Returns a
+    ``(num_classes,)`` int32 count of non-zero, non-outlier words whose
+    narrowest fitting base sits in each class.  Diagnostic view of the
+    per-page demand that drives adaptive bucket-cap profile selection:
+    when the histogram fits a profile's caps, that profile encodes the
+    page with zero spills/drops (property-tested in
+    ``tests/test_fr_v2.py``).  The encoders themselves do not use the
+    histogram — they run the exact spill simulation per profile, which
+    additionally prices bucket overflow and outlier-table pressure.
+    """
+    k = cls.shape[0]
+    active = code < k
+    word_cls = cls[jnp.clip(code, 0, k - 1)]
+    return jnp.stack([
+        (active & (word_cls == i)).sum(dtype=jnp.int32)
+        for i in range(num_classes)
+    ])
+
+
 def delta_fit(values: jax.Array, table: BaseTable, *, word_bits: int):
     """(n, k) wrapping deltas and the per-base fit mask ``|d| < 2**(w-1)``."""
     d = wrapped_delta(values, table.bases, word_bits)
@@ -159,12 +216,15 @@ def assign(
 __all__ = [
     "LANE_BITS",
     "LANE_WIDTHS",
+    "PROFILE_ID_BITS",
     "BaseTable",
     "as_base_table",
     "assign",
+    "class_demand",
     "class_indices",
     "delta_fit",
     "outlier_code",
     "ptr_bits",
+    "validate_cap_profiles",
     "zero_code",
 ]

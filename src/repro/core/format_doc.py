@@ -21,9 +21,16 @@ from repro.core.gbdi_fr import FRConfig, fr_encode
 
 def example_config() -> FRConfig:
     """Doc-sized config: smallest legal page (128 words), two bases, both
-    width classes, tiny buckets so the spill chain and a drop both fire."""
+    width classes, tiny buckets so the spill chain and a drop both fire.
+
+    Two bucket-cap profiles so the adaptive header byte shows up: the
+    worked page keeps the wide-heavy profile 0 (profile 1 would drop 11
+    words — exactness wins), while an all-zero page serializes one lane
+    smaller under narrow-heavy profile 1 (both drop nothing, size wins).
+    """
     return FRConfig(word_bits=16, page_words=128, num_bases=2,
-                    width_set=(4, 8), bucket_caps=(8, 24), outlier_cap=4)
+                    width_set=(4, 8), cap_profiles=((8, 24), (32, 8)),
+                    outlier_cap=4)
 
 
 def example_table() -> BaseTable:
@@ -61,21 +68,27 @@ def encode_example():
 def serialize_page(blob: dict, cfg: FRConfig) -> bytes:
     """Normative byte layout of one encoded page:
 
-    ``ptrs`` int32 lanes | ``deltas`` int32 lanes | ``out_vals`` at
-    word_bits each | ``out_idx`` as uint16 | ``n_out`` as uint32 — all
-    little-endian; exactly ``cfg.compressed_bytes_per_page()`` bytes.
+    ``profile`` as one uint8 (only when the config ships >1 cap profile)
+    | ``ptrs`` int32 lanes | ``deltas`` int32 lanes — only the selected
+    profile's ``delta_lanes_for(profile)`` lanes; the static buffer
+    padding past them is *not* stored | ``out_vals`` at word_bits each |
+    ``out_idx`` as uint16 | ``n_out`` as uint32 — all little-endian;
+    exactly ``cfg.compressed_bytes_for_profile(profile)`` bytes.
     (``n_spilled``/``n_dropped`` are side-band diagnostics, not stored.)
     """
     val_dt = "<u2" if cfg.word_bits == 16 else "<u4"
     mask = (1 << cfg.word_bits) - 1
-    out = b"".join([
+    profile = int(np.asarray(blob["profile"])) if cfg.num_profiles > 1 else 0
+    header = bytes([profile]) if cfg.num_profiles > 1 else b""
+    deltas = np.asarray(blob["deltas"], np.int32)[: cfg.delta_lanes_for(profile)]
+    out = header + b"".join([
         np.asarray(blob["ptrs"], np.int32).astype("<i4").tobytes(),
-        np.asarray(blob["deltas"], np.int32).astype("<i4").tobytes(),
+        deltas.astype("<i4").tobytes(),
         (np.asarray(blob["out_vals"], np.int64) & mask).astype(val_dt).tobytes(),
         np.asarray(blob["out_idx"], np.uint16).astype("<u2").tobytes(),
         np.asarray(blob["n_out"], np.uint32).astype("<u4").tobytes(),
     ])
-    assert len(out) == cfg.compressed_bytes_per_page(), len(out)
+    assert len(out) == cfg.compressed_bytes_for_profile(profile), len(out)
     return out
 
 
@@ -91,13 +104,22 @@ def _rows(arr, per, fmt):
 def worked_example() -> str:
     cfg, blob = encode_example()
     x = example_page()
+    pid = int(np.asarray(blob["profile"])) if cfg.num_profiles > 1 else 0
+    lanes = cfg.delta_lanes_for(pid)
+    offs = cfg.class_lane_offsets_for(pid)
+    zero_blob = {k: np.asarray(v)[0] for k, v in fr_encode(
+        np.zeros((1, cfg.page_words), np.int32), example_table(), cfg).items()}
+    zero_pid = int(zero_blob["profile"])
     lines = [
         "config : word_bits=16 page_words=128 num_bases=2 width_set=(4, 8)",
-        "         bucket_caps=(8, 24) outlier_cap=4",
+        "         cap_profiles=((8, 24), (32, 8)) outlier_cap=4",
         f"derived: ptr_bits={cfg.ptr_bits} ptr_lanes={cfg.ptr_lanes} "
-        f"class_lanes={cfg.class_lanes} delta_lanes={cfg.delta_lanes}",
-        f"         compressed_bytes_per_page={cfg.compressed_bytes_per_page()} "
-        f"bits_per_word={cfg.bits_per_word():.2f} ratio={cfg.ratio():.2f}",
+        f"delta_lanes(buffer)={cfg.delta_lanes}",
+        "         per profile: "
+        + "  ".join(
+            f"p{p}: class_lanes={cfg.class_lanes_for(p)} "
+            f"bytes={cfg.compressed_bytes_for_profile(p)}"
+            for p in range(cfg.num_profiles)),
         "table  : bases=[1000, 1040] widths=[4, 8]  "
         "(codes: 0, 1; zero=2, outlier=3)",
         "",
@@ -107,20 +129,25 @@ def worked_example() -> str:
         "per-word codes (unpacked from ptrs; 2 bits each):",
         *_rows(np.asarray(_unpacked_codes(blob, cfg))[:64], 32,
                lambda v: str(int(v))),
-        f"counters: n_out={int(blob['n_out'])} "
+        f"counters: profile={pid} n_out={int(blob['n_out'])} "
         f"n_spilled={int(blob['n_spilled'])} n_dropped={int(blob['n_dropped'])}",
+        f"  (probe: profile 0 drops 1 and wins on exactness; profile 1 "
+        f"would drop 11.  An all-zero page drops nothing either way and "
+        f"picks the smaller profile {zero_pid}: "
+        f"{cfg.compressed_bytes_for_profile(zero_pid)} bytes.)",
         "",
         f"ptrs   ({cfg.ptr_lanes} int32 lanes):",
         *_rows(blob["ptrs"], 8, lambda v: f"0x{int(np.uint32(v)):08x}"),
-        f"deltas ({cfg.delta_lanes} int32 lanes; class0 lanes "
-        f"[0..{cfg.class_lanes[0] - 1}], class1 "
-        f"[{cfg.class_lane_offsets[1]}..{cfg.delta_lanes - 1}]):",
-        *_rows(blob["deltas"], 8, lambda v: f"0x{int(np.uint32(v)):08x}"),
+        f"deltas (profile {pid}: {lanes} of {cfg.delta_lanes} buffer lanes "
+        f"stored; class0 lanes [0..{offs[1] - 1}], class1 "
+        f"[{offs[1]}..{lanes - 1}]):",
+        *_rows(np.asarray(blob["deltas"])[:lanes], 8,
+               lambda v: f"0x{int(np.uint32(v)):08x}"),
         f"out_vals = {[int(v) for v in blob['out_vals']]}   "
         f"out_idx = {[int(v) for v in blob['out_idx']]}",
         "",
-        f"serialized page ({cfg.compressed_bytes_per_page()} bytes: "
-        "ptrs | deltas | out_vals | out_idx | n_out):",
+        f"serialized page ({cfg.compressed_bytes_for_profile(pid)} bytes: "
+        "profile | ptrs | deltas | out_vals | out_idx | n_out):",
         *_hexdump(serialize_page(blob, cfg)),
     ]
     return "\n".join(lines)

@@ -19,6 +19,14 @@ v2 page layout (all shapes static, derived from :class:`FRConfig`)::
                           (zeros and outliers consume no payload)
   out_vals/out_idx (outlier_cap,) + n_out  fixed-capacity outlier table
   n_spilled / n_dropped   per-page diagnostics (see spill rules)
+  profile  ()             bucket-cap profile id — present only when the
+                          config ships >1 ``cap_profiles``.  The encoder
+                          buckets each page under every profile and keeps
+                          the lexicographically cheapest ``(n_dropped,
+                          serialized_bits, profile_id)`` candidate;
+                          ``deltas`` then uses that profile's class caps
+                          and offsets, zero-padded to the static
+                          ``delta_lanes`` buffer (the max over profiles).
 
 Sub-stream positions carry no side metadata: a word's slot in its class is
 its page-order rank among same-class words, which the decoder recomputes
@@ -88,6 +96,13 @@ class FRConfig:
     width_set: tuple[int, ...] = (4, 8)   # lane-packable, ascending, < word_bits
     bucket_caps: tuple[int, ...] = (192, 1856)  # per-page words per width class
     outlier_cap: int = 64          # full-width slots per page (3.1% of 2048)
+    #: adaptive per-page bucket-cap profiles: a small static table of cap
+    #: tuples (each pairing ``width_set``) the encoder chooses from per
+    #: page via the demand probe.  ``None`` (default) means the single
+    #: profile ``(bucket_caps,)`` — today's static format, bit-for-bit.
+    #: When set, ``bucket_caps`` is forced to ``cap_profiles[0]`` so the
+    #: legacy properties keep describing profile 0.
+    cap_profiles: tuple[tuple[int, ...], ...] | None = None
     # v1 compat: FRConfig(delta_bits=w) == single-width v2 with one
     # full-page bucket (width_set=(w,), bucket_caps=(page_words,)).
     delta_bits: dataclasses.InitVar[int | None] = None
@@ -96,7 +111,7 @@ class FRConfig:
         if delta_bits is not None:
             object.__setattr__(self, "width_set", (int(delta_bits),))
             object.__setattr__(self, "bucket_caps", (self.page_words,))
-        ws, caps = self.width_set, self.bucket_caps
+        ws = self.width_set
         if self.word_bits not in (16, 32):
             raise ValueError("word_bits must be 16 or 32")
         if not ws or list(ws) != sorted(set(ws)):
@@ -104,6 +119,11 @@ class FRConfig:
         for w in ws:
             if 32 % w or w >= self.word_bits:
                 raise ValueError("each width must divide 32 and be < word_bits")
+        if self.cap_profiles is not None:
+            norm = fmt.validate_cap_profiles(self.cap_profiles, ws, self.page_words)
+            object.__setattr__(self, "cap_profiles", norm)
+            object.__setattr__(self, "bucket_caps", norm[0])
+        caps = self.bucket_caps
         if len(caps) != len(ws):
             raise ValueError("bucket_caps must pair width_set one-to-one")
         for w, cap in zip(ws, caps):
@@ -115,10 +135,73 @@ class FRConfig:
             raise ValueError("page_words must be lane-aligned (multiple of 128)")
         if self.num_bases + 2 > (1 << 16):
             raise ValueError("num_bases does not fit a lane-packable pointer")
+        # the probe cost is computed on-device in int32; the worst case is
+        # every word dropped, so bound penalty * page_words statically or
+        # a wrap could silently invert the exactness-first profile order
+        if (self.num_profiles > 1
+                and self.drop_penalty_bits * self.page_words > (1 << 31) - 1):
+            raise ValueError(
+                "cap_profiles probe cost would overflow int32 "
+                f"(drop_penalty_bits={self.drop_penalty_bits} x "
+                f"page_words={self.page_words}); shrink the page or the "
+                "delta payload")
 
     @property
     def num_classes(self) -> int:
         return len(self.width_set)
+
+    # -- adaptive bucket-cap profiles ---------------------------------------
+
+    @property
+    def profiles(self) -> tuple[tuple[int, ...], ...]:
+        """The bucket-cap profile table (``(bucket_caps,)`` if static)."""
+        return self.cap_profiles if self.cap_profiles is not None else (self.bucket_caps,)
+
+    @property
+    def num_profiles(self) -> int:
+        return len(self.profiles)
+
+    def class_lanes_for(self, profile: int) -> tuple[int, ...]:
+        return tuple(cap * w // 32
+                     for w, cap in zip(self.width_set, self.profiles[profile]))
+
+    def class_lane_offsets_for(self, profile: int) -> tuple[int, ...]:
+        offs, off = [], 0
+        for lanes in self.class_lanes_for(profile):
+            offs.append(off)
+            off += lanes
+        return tuple(offs)
+
+    def delta_lanes_for(self, profile: int) -> int:
+        return sum(self.class_lanes_for(profile))
+
+    def compressed_bytes_for_profile(self, profile: int) -> int:
+        """Exact serialized bytes of a page encoded under ``profile``
+        (adds the 1-byte profile id header when the table has > 1 entry)."""
+        out_val_bytes = self.outlier_cap * (self.word_bits // 8)
+        out_idx_bytes = self.outlier_cap * 2
+        header = 1 if self.num_profiles > 1 else 0
+        return (header + 4 * (self.ptr_lanes + self.delta_lanes_for(profile))
+                + out_val_bytes + out_idx_bytes + 4)
+
+    @property
+    def drop_penalty_bits(self) -> int:
+        """Probe cost per dropped word: one unit larger than any possible
+        serialized-size difference, making the scalar cost order exactly
+        the lexicographic ``(n_dropped, serialized_bits, profile_id)``."""
+        return 8 * self.compressed_bytes_per_page() + 1
+
+    def profile_cost_bits(self, profile: int, n_dropped) -> "jax.Array":
+        """The probe's effective encoded size of a page under ``profile``.
+
+        Exactness first, then size: ``n_dropped * drop_penalty_bits +
+        serialized_bits`` scalar-encodes the lexicographic order
+        ``(n_dropped, serialized_bits)`` — a profile that drops fewer words
+        always wins; among equally-exact profiles the smallest serialized
+        page wins; remaining ties break to the lowest profile id (argmin
+        order).  Normative — all backends must agree bit-for-bit."""
+        return (jnp.int32(self.drop_penalty_bits) * n_dropped
+                + jnp.int32(8 * self.compressed_bytes_for_profile(profile)))
 
     @property
     def widest_bits(self) -> int:
@@ -154,13 +237,16 @@ class FRConfig:
 
     @property
     def delta_lanes(self) -> int:
-        return sum(self.class_lanes)
+        """Static delta-buffer lanes: the max over the profile table, so
+        one device buffer shape fits whichever profile a page selects
+        (== ``sum(class_lanes)`` for single-profile configs)."""
+        return max(self.delta_lanes_for(p) for p in range(self.num_profiles))
 
     def compressed_bytes_per_page(self) -> int:
-        # ptr lanes + delta lanes + outlier values + outlier positions + count
-        out_val_bytes = self.outlier_cap * (self.word_bits // 8)
-        out_idx_bytes = self.outlier_cap * 2  # fits int16 positions
-        return 4 * (self.ptr_lanes + self.delta_lanes) + out_val_bytes + out_idx_bytes + 4
+        """Static worst-case page bytes (the device-buffer bound); per-page
+        serialized sizes are :meth:`compressed_bytes_for_profile`."""
+        return max(self.compressed_bytes_for_profile(p)
+                   for p in range(self.num_profiles))
 
     def ratio(self) -> float:
         return (self.page_words * self.word_bits / 8) / self.compressed_bytes_per_page()
@@ -193,23 +279,24 @@ def unpack_lanes(p: jax.Array, bits: int, n: int) -> jax.Array:
 # single-page encode/decode (vmapped below)
 # ---------------------------------------------------------------------------
 
-def _encode_page(x: jax.Array, table: BaseTable, cfg: FRConfig) -> dict[str, jax.Array]:
+def _bucket_page(
+    x: jax.Array, d: jax.Array, cost: jax.Array, cls: jax.Array, known: jax.Array,
+    sel: jax.Array, active: jax.Array, out_cand: jax.Array, is_zero: jax.Array,
+    caps: tuple[int, ...], cfg: FRConfig,
+) -> dict[str, jax.Array]:
+    """Spill chain + compaction of one page under one bucket-cap profile.
+
+    Pure in its mask arguments, so the adaptive encoder can evaluate every
+    profile from the same assignment state.  ``deltas`` is zero-padded to
+    the static ``cfg.delta_lanes`` buffer width.
+    """
     P, cap_out, wb = cfg.page_words, cfg.outlier_cap, cfg.word_bits
-    cls = fmt.class_indices(table.widths, cfg.width_set)       # (k,)
-    known = cls < cfg.num_classes       # bases with a width outside the
-    d, fits = fmt.delta_fit(x, table, word_bits=wb)            # (P, k)
-    BIG = jnp.int32(wb + 1)             # config's width_set are dead entries
-    cost = jnp.where(fits & known[None, :], table.widths[None, :], BIG)
-    sel = jnp.argmin(cost, axis=1).astype(jnp.int32)
-    found = jnp.take_along_axis(cost, sel[:, None], axis=1)[:, 0] <= wb
-    is_zero = x == 0
-    active = found & ~is_zero
-    out_cand = (~found) & (~is_zero)
+    BIG = jnp.int32(wb + 1)
 
     # narrow -> wide bucketing with page-order compaction; bucket overflow
     # re-codes to the narrowest fitting wider-class base, else outlier
     subs, n_spilled = [], jnp.int32(0)
-    for i, (w, cap) in enumerate(zip(cfg.width_set, cfg.bucket_caps)):
+    for i, (w, cap) in enumerate(zip(cfg.width_set, caps)):
         inclass = active & (cls[sel] == i)
         rank = jnp.cumsum(inclass.astype(jnp.int32)) - 1
         keep = inclass & (rank < cap)
@@ -242,15 +329,49 @@ def _encode_page(x: jax.Array, table: BaseTable, cfg: FRConfig) -> dict[str, jax
 
     code = jnp.where(is_zero, jnp.int32(cfg.zero_code), sel)
     code = jnp.where(out_cand, jnp.int32(cfg.outlier_code), code)
+    deltas = jnp.concatenate(subs) if subs else jnp.zeros((0,), jnp.int32)
+    deltas = jnp.pad(deltas, (0, cfg.delta_lanes - deltas.shape[0]))
     return {
         "ptrs": pack_lanes(code.astype(jnp.uint32), cfg.ptr_bits),
-        "deltas": jnp.concatenate(subs) if subs else jnp.zeros((0,), jnp.int32),
+        "deltas": deltas,
         "out_vals": out_vals,
         "out_idx": out_idx,
         "n_out": jnp.minimum(out_cand.sum(dtype=jnp.int32), cap_out),
         "n_spilled": n_spilled,
         "n_dropped": dropped.sum(dtype=jnp.int32),
     }
+
+
+def _encode_page(x: jax.Array, table: BaseTable, cfg: FRConfig) -> dict[str, jax.Array]:
+    wb = cfg.word_bits
+    cls = fmt.class_indices(table.widths, cfg.width_set)       # (k,)
+    known = cls < cfg.num_classes       # bases with a width outside the
+    d, fits = fmt.delta_fit(x, table, word_bits=wb)            # (P, k)
+    BIG = jnp.int32(wb + 1)             # config's width_set are dead entries
+    cost = jnp.where(fits & known[None, :], table.widths[None, :], BIG)
+    sel = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    found = jnp.take_along_axis(cost, sel[:, None], axis=1)[:, 0] <= wb
+    is_zero = x == 0
+    active = found & ~is_zero
+    out_cand = (~found) & (~is_zero)
+
+    # demand probe: bucket the page under every cap profile (same
+    # assignment state each time) and keep the lexicographically cheapest
+    # (n_dropped, serialized_bits, profile_id) candidate — exactness
+    # first, then size; see FRConfig.profile_cost_bits.
+    cands = [
+        _bucket_page(x, d, cost, cls, known, sel, active, out_cand, is_zero,
+                     caps, cfg)
+        for caps in cfg.profiles
+    ]
+    if cfg.num_profiles == 1:
+        return cands[0]
+    costs = jnp.stack([cfg.profile_cost_bits(p, b["n_dropped"])
+                       for p, b in enumerate(cands)])
+    pid = jnp.argmin(costs).astype(jnp.int32)
+    blob = {k: jnp.stack([b[k] for b in cands])[pid] for k in cands[0]}
+    blob["profile"] = pid
+    return blob
 
 
 def _decode_page(blob: dict[str, jax.Array], table: BaseTable, cfg: FRConfig) -> jax.Array:
@@ -263,18 +384,29 @@ def _decode_page(blob: dict[str, jax.Array], table: BaseTable, cfg: FRConfig) ->
 
     # per-class sub-stream gather: a word's slot is its page-order rank
     # among same-class words — the encoder's prefix sum, recomputed
-    delta = jnp.zeros(P, jnp.int32)
-    for i, (w, cap, off) in enumerate(
-        zip(cfg.width_set, cfg.bucket_caps, cfg.class_lane_offsets)
-    ):
-        if cap == 0:
-            continue
-        sub = unpack_lanes(blob["deltas"][off:off + cap * w // 32], w, cap).astype(jnp.int32)
-        half = 1 << (w - 1)
-        sub = jnp.where(sub >= half, sub - (1 << w), sub)
-        inclass = active & (cls_w == i)
-        rank = jnp.cumsum(inclass.astype(jnp.int32)) - 1
-        delta = jnp.where(inclass, sub[jnp.clip(rank, 0, cap - 1)], delta)
+    def gather_deltas(profile: int) -> jax.Array:
+        delta = jnp.zeros(P, jnp.int32)
+        for i, (w, cap, off) in enumerate(
+            zip(cfg.width_set, cfg.profiles[profile],
+                cfg.class_lane_offsets_for(profile))
+        ):
+            if cap == 0:
+                continue
+            sub = unpack_lanes(blob["deltas"][off:off + cap * w // 32], w, cap).astype(jnp.int32)
+            half = 1 << (w - 1)
+            sub = jnp.where(sub >= half, sub - (1 << w), sub)
+            inclass = active & (cls_w == i)
+            rank = jnp.cumsum(inclass.astype(jnp.int32)) - 1
+            delta = jnp.where(inclass, sub[jnp.clip(rank, 0, cap - 1)], delta)
+        return delta
+
+    if cfg.num_profiles == 1:
+        delta = gather_deltas(0)
+    else:   # the page header says which profile laid out the sub-streams
+        pid = blob["profile"]
+        delta = jnp.zeros(P, jnp.int32)
+        for p in range(cfg.num_profiles):
+            delta = jnp.where(pid == p, gather_deltas(p), delta)
 
     val = table.bases[base_code] + delta
     if wb == 16:

@@ -174,13 +174,32 @@ class FRCodec:
         # base values + width-class index per base (0 bits if single-class)
         idx_bits = (len(cfg.width_set) - 1).bit_length()
         table_bits = cfg.num_bases * (cfg.word_bits + idx_bits)
-        return n_pages * cfg.compressed_bytes_per_page() * 8 + table_bits
+        if cfg.num_profiles == 1:
+            return n_pages * cfg.compressed_bytes_per_page() * 8 + table_bits
+        # adaptive profiles serialize at their own per-page size
+        # (profile byte + only the selected profile's delta lanes)
+        prof = np.asarray(blob["profile"]).reshape(-1)[:n_pages]
+        bytes_per = np.array([cfg.compressed_bytes_for_profile(p)
+                              for p in range(cfg.num_profiles)], np.int64)
+        return int(bytes_per[prof].sum()) * 8 + table_bits
 
     def dropped_words(self, blob: dict[str, Any]) -> int:
         return int(np.asarray(blob["n_dropped"]).sum())
 
     def spilled_words(self, blob: dict[str, Any]) -> int:
         return int(np.asarray(blob["n_spilled"]).sum())
+
+    def profile_histogram(self, blob: dict[str, Any]) -> list[int]:
+        """Per-profile page counts of the data pages (``[n_pages]`` for
+        single-profile configs) — the per-page selection behind
+        :meth:`size_bits`'s adaptive accounting, exposed for analyzing
+        which profiles a workload actually exercises."""
+        cfg: FRConfig = blob["_cfg"]
+        n_pages = -(-blob["_n_words"] // cfg.page_words)
+        if cfg.num_profiles == 1:
+            return [n_pages]
+        prof = np.asarray(blob["profile"]).reshape(-1)[:n_pages]
+        return np.bincount(prof, minlength=cfg.num_profiles).tolist()
 
 
 def default_codecs() -> CodecRegistry:

@@ -77,6 +77,26 @@ def sample_stream(
     return out.view(np.uint16 if wb == 16 else np.uint32)
 
 
+_STAMP_TAIL_BYTES = 4096
+
+
+def _freshness_stamp(path: str) -> tuple:
+    """Cache key for a container file: (size, mtime_ns, tail crc32).
+
+    ``(size, st_mtime_ns)`` alone is not enough: filesystems with coarse
+    timestamp granularity report whole-second mtimes, so a same-second
+    same-size rewrite (e.g. ``--force`` re-ingest in a script) would alias
+    the stale entry.  The crc of the final 4 KiB closes that hole cheaply
+    even for multi-GiB dumps — a zip's central directory (member sizes +
+    CRCs) lives at the end of the file, so any payload change reaches it.
+    """
+    st = os.stat(path)
+    with open(path, "rb") as f:
+        f.seek(max(0, st.st_size - _STAMP_TAIL_BYTES))
+        tail_crc = zlib.crc32(f.read(_STAMP_TAIL_BYTES))
+    return (st.st_size, st.st_mtime_ns, tail_crc)
+
+
 @functools.lru_cache(maxsize=8)
 def _load_image_at(path: str, stamp: tuple) -> DumpImage:
     del stamp  # cache key only
@@ -84,10 +104,10 @@ def _load_image_at(path: str, stamp: tuple) -> DumpImage:
 
 
 def _load_image(path: str) -> DumpImage:
-    # keyed on (mtime, size) so re-ingesting over the same container
-    # (--force) serves the fresh bytes, not a stale cache hit
-    st = os.stat(path)
-    return _load_image_at(path, (st.st_mtime_ns, st.st_size))
+    # keyed on (size, mtime_ns, tail crc) so rewriting a container
+    # (--force re-ingest) serves the fresh bytes, not a stale cache hit —
+    # even when the rewrite lands in the same whole-second mtime
+    return _load_image_at(path, _freshness_stamp(path))
 
 
 def dump_workload(path: str | Path, *, page_bytes: int = PAGE_BYTES) -> Workload:

@@ -28,6 +28,11 @@ convention, and a ``BENCH_*.json``-style artifact.
 configs over the selected suite and emits a Pareto table (geomean CR vs
 encode MB/s, Pareto-optimal rows marked) plus a ``BENCH_sweep.json``
 artifact — replacing the ad-hoc benchmark loops the ROADMAP called out.
+``--profile-sets`` adds adaptive per-page bucket-cap profile rows
+(``SWEEP_PROFILE_SETS``; see docs/FORMAT.md §5a) next to the static grid.
+
+``BENCH_*.json`` artifacts written under ``experiments/`` are mirrored
+to the repo root (trajectory tracking reads root ``BENCH_*.json``).
 
 ``--throughput`` is the perf baseline: warmed, median-of-K encode/decode
 GiB/s per codec x workload family (no CR columns, no verification), with
@@ -193,6 +198,38 @@ SWEEP_SHAPES = {
 }
 SWEEP_NUM_BASES = (6, 14, 30)
 
+#: named bucket-cap profile tables for the adaptive sweep axis, keyed by
+#: word size.  Every table pairs the *default v2 width set* of that word
+#: size (``SWEEP_SHAPES[wb][1][0]``): profile 0 is the static default,
+#: the rest span narrow-heavy -> wide-heavy -> small (zero/sparse pages).
+#: ``"static"`` is the plain ``SWEEP_SHAPES`` bucket-cap grid.
+SWEEP_PROFILE_SETS: dict[str, dict[int, tuple[tuple[int, ...], ...]] | None] = {
+    "static": None,
+    "adaptive4": {
+        16: ((192, 1856), (1024, 1024), (64, 1984), (256, 512)),
+        32: ((192, 1856), (1024, 1024), (64, 1984), (256, 512)),
+    },
+    "adaptive2": {
+        16: ((192, 1856), (256, 512)),
+        32: ((192, 1856), (256, 512)),
+    },
+}
+DEFAULT_PROFILE_SETS = "static,adaptive4"
+
+
+def _sweep_row(rows, label, cells, backend, **extra):
+    rows.append({
+        "config": label,
+        "backend": backend,
+        "geomean_cr": geomean(c.compression_ratio for c in cells),
+        "bits_per_word": float(np.mean([c.bits_per_word for c in cells])),
+        "encode_mb_s": float(np.mean([c.encode_mb_s for c in cells])),
+        "exact_frac": float(np.mean([c.exact_frac for c in cells])),
+        "verified": all(c.verified for c in cells),
+        "cells": [c.to_json() for c in cells],
+        **extra,
+    })
+
 
 def sweep(
     workload_registry: WorkloadRegistry,
@@ -202,49 +239,82 @@ def sweep(
     n_bytes: int = 1 << 18,
     seed: int = 0,
     verify: bool = True,
+    profile_sets: str = DEFAULT_PROFILE_SETS,
 ) -> list[dict]:
-    """Evaluate the FR codec across the config grid; one row per config."""
+    """Evaluate the FR codec across the config grid; one row per config.
+
+    ``profile_sets`` is a comma list of :data:`SWEEP_PROFILE_SETS` names —
+    the adaptive per-page bucket-cap axis.  ``static`` sweeps the plain
+    ``num_bases x (width_set, bucket_caps)`` grid; each adaptive set adds
+    one row per ``num_bases`` pairing the default v2 width set with its
+    cap-profile table.
+    """
     from repro.core.gbdi_fr import FRConfig
     from repro.eval.codecs import FRCodec
 
+    set_names = [s.strip() for s in profile_sets.split(",") if s.strip()]
+    unknown = sorted(set(set_names) - set(SWEEP_PROFILE_SETS))
+    if unknown:
+        raise KeyError(f"unknown profile set(s) {unknown}; "
+                       f"choose from {sorted(SWEEP_PROFILE_SETS)}")
     workloads = workload_registry.select(suite)
     rows: list[dict] = []
-    for num_bases in SWEEP_NUM_BASES:
-        for shape_idx in range(len(SWEEP_SHAPES[16])):
-            cells = []
-            width_sets: dict[int, tuple[int, ...]] = {}
-            for wl in workloads:
-                width_set, caps = SWEEP_SHAPES[wl.word_bits][shape_idx]
-                width_sets[wl.word_bits] = width_set
-                cfg = FRConfig(word_bits=wl.word_bits, num_bases=num_bases,
-                               width_set=width_set, bucket_caps=caps)
-                codec = FRCodec(
-                    word_bits=wl.word_bits, backend=backend, cfg=cfg,
-                    name=f"fr[k{num_bases}/w{'-'.join(map(str, width_set))}]",
-                )
-                data = wl.generate(n_bytes, seed)
-                # repeats=1: the sweep is a CR Pareto, not a timing harness
-                cells.append(evaluate_cell(wl, codec, data, verify=verify,
-                                           repeats=1))
-            # one label per word size actually evaluated — a mixed suite
-            # sweeps paired shapes, e.g. "k14/w4-8|w8-16"
-            label = f"k{num_bases}/" + "|".join(
-                f"w{'-'.join(map(str, ws))}"
-                for _, ws in sorted(width_sets.items())
+
+    def run_grid(num_bases, make_cfg, tag):
+        cells = []
+        width_sets: dict[int, tuple[int, ...]] = {}
+        for wl in workloads:
+            cfg = make_cfg(wl.word_bits, num_bases)
+            width_sets[wl.word_bits] = cfg.width_set
+            codec = FRCodec(
+                word_bits=wl.word_bits, backend=backend, cfg=cfg,
+                name=f"fr[k{num_bases}/w{'-'.join(map(str, cfg.width_set))}"
+                     f"{tag}]",
             )
-            rows.append({
-                "config": label,
-                "num_bases": num_bases,
-                "shape_idx": shape_idx,
-                "width_sets": {str(wb): list(ws) for wb, ws in sorted(width_sets.items())},
-                "backend": backend,
-                "geomean_cr": geomean(c.compression_ratio for c in cells),
-                "bits_per_word": float(np.mean([c.bits_per_word for c in cells])),
-                "encode_mb_s": float(np.mean([c.encode_mb_s for c in cells])),
-                "exact_frac": float(np.mean([c.exact_frac for c in cells])),
-                "verified": all(c.verified for c in cells),
-                "cells": [c.to_json() for c in cells],
-            })
+            data = wl.generate(n_bytes, seed)
+            # repeats=1: the sweep is a CR Pareto, not a timing harness
+            cells.append(evaluate_cell(wl, codec, data, verify=verify,
+                                       repeats=1))
+        # one label per word size actually evaluated — a mixed suite
+        # sweeps paired shapes, e.g. "k14/w4-8|w8-16"
+        label = f"k{num_bases}/" + "|".join(
+            f"w{'-'.join(map(str, ws))}" for _, ws in sorted(width_sets.items())
+        ) + tag
+        return label, cells, width_sets
+
+    for num_bases in SWEEP_NUM_BASES:
+        if "static" in set_names:
+            for shape_idx in range(len(SWEEP_SHAPES[16])):
+                def mk(wb, k, idx=shape_idx):
+                    width_set, caps = SWEEP_SHAPES[wb][idx]
+                    return FRConfig(word_bits=wb, num_bases=k,
+                                    width_set=width_set, bucket_caps=caps)
+                label, cells, width_sets = run_grid(num_bases, mk, "")
+                _sweep_row(
+                    rows, label, cells, backend,
+                    num_bases=num_bases, shape_idx=shape_idx,
+                    profile_set="static",
+                    width_sets={str(wb): list(ws)
+                                for wb, ws in sorted(width_sets.items())},
+                )
+        for name in set_names:
+            profiles = SWEEP_PROFILE_SETS[name]
+            if profiles is None:
+                continue
+
+            def mk(wb, k, profs=profiles):
+                width_set = SWEEP_SHAPES[wb][1][0]   # default v2 shape
+                return FRConfig(word_bits=wb, num_bases=k,
+                                width_set=width_set, cap_profiles=profs[wb])
+            label, cells, width_sets = run_grid(num_bases, mk, f"+{name}")
+            _sweep_row(
+                rows, label, cells, backend,
+                num_bases=num_bases, shape_idx=None, profile_set=name,
+                width_sets={str(wb): list(ws)
+                            for wb, ws in sorted(width_sets.items())},
+                cap_profiles={str(wb): [list(p) for p in profs]
+                              for wb, profs in sorted(profiles.items())},
+            )
     # Pareto front on (geomean CR up, encode MB/s up)
     for r in rows:
         r["pareto"] = not any(
@@ -256,12 +326,12 @@ def sweep(
 
 
 def format_sweep_table(rows: list[dict]) -> str:
-    hdr = f"{'config':<18} {'CR(geo)':>8} {'bits/w':>7} {'enc MB/s':>9} " \
+    hdr = f"{'config':<26} {'CR(geo)':>8} {'bits/w':>7} {'enc MB/s':>9} " \
           f"{'exact':>7} {'ok':>3} {'pareto':>6}"
     lines = [hdr, "-" * len(hdr)]
     for r in sorted(rows, key=lambda r: -r["geomean_cr"]):
         lines.append(
-            f"{r['config']:<18} {r['geomean_cr']:>8.3f} {r['bits_per_word']:>7.2f} "
+            f"{r['config']:<26} {r['geomean_cr']:>8.3f} {r['bits_per_word']:>7.2f} "
             f"{r['encode_mb_s']:>9.1f} {r['exact_frac']:>7.4f} "
             f"{'yes' if r['verified'] else 'NO':>3} {'*' if r['pareto'] else '':>6}"
         )
@@ -398,6 +468,29 @@ def throughput_artifact(rows: list[dict], *, codecs: str, n_bytes: int,
 # reporting
 # ---------------------------------------------------------------------------
 
+def write_artifact(path: str, payload: dict) -> list:
+    """Write a ``BENCH_*.json`` artifact, mirroring it to the repo root.
+
+    Trajectory tracking reads repo-root ``BENCH_*.json`` files, while the
+    curated artifacts live under ``experiments/`` — so when the target sits
+    in a directory named ``experiments``, an identical copy lands next to
+    that directory (``experiments/BENCH_x.json`` -> ``BENCH_x.json``).
+    Returns the list of paths written.
+    """
+    from pathlib import Path
+
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    text = json.dumps(payload, indent=2)
+    p.write_text(text)
+    written = [p]
+    if p.parent.name == "experiments" and p.name.startswith("BENCH_"):
+        mirror = p.parent.parent / p.name
+        mirror.write_text(text)
+        written.append(mirror)
+    return written
+
+
 def geomean(xs) -> float:
     """Geometric mean of CRs (0.0 for an empty set) — the one shared by
     the table, bench_compression and any consumer of BENCH_eval.json."""
@@ -482,6 +575,11 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
     ap.add_argument("--sweep", action="store_true",
                     help="sweep num_bases x width_set FR configs; Pareto "
                          "table + BENCH_sweep.json instead of per-codec cells")
+    ap.add_argument("--profile-sets", default=DEFAULT_PROFILE_SETS,
+                    help="comma list of bucket-cap profile sets for --sweep "
+                         f"(from: {','.join(sorted(SWEEP_PROFILE_SETS))}; "
+                         "'static' is the plain cap grid, the rest add "
+                         "adaptive per-page profile rows)")
     ap.add_argument("--throughput", action="store_true",
                     help="perf baseline: warmed median-of-K GiB/s per codec "
                          "x workload family + BENCH_throughput.json")
@@ -514,15 +612,11 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
                 print(f"throughput/{r['codec']}_decode/{r['workload']},"
                       f"{r['dec_s'] / mb * 1e6:.0f},GiB/s={r['dec_gib_s']:.3f}")
         if args.json:
-            from pathlib import Path
-
-            p = Path(args.json)
-            p.parent.mkdir(parents=True, exist_ok=True)
-            p.write_text(json.dumps(throughput_artifact(
-                rows, codecs=codecs, n_bytes=n_bytes,
-                kernel_n_bytes=kernel_n_bytes, repeats=repeats,
-                seed=args.seed), indent=2))
-            print(f"wrote {p}")
+            for p in write_artifact(args.json, throughput_artifact(
+                    rows, codecs=codecs, n_bytes=n_bytes,
+                    kernel_n_bytes=kernel_n_bytes, repeats=repeats,
+                    seed=args.seed)):
+                print(f"wrote {p}")
         return []
 
     if args.n_bytes is None:
@@ -536,21 +630,19 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
             rows = sweep(default_workloads(args.dump_dir), suite=args.suite,
                          backend=backend,
                          n_bytes=args.n_bytes, seed=args.seed,
-                         verify=not args.no_verify)
+                         verify=not args.no_verify,
+                         profile_sets=args.profile_sets)
         except KeyError as e:
             raise SystemExit(f"error: {e.args[0] if e.args else e}")
         print(format_sweep_table(rows))
         if args.json:
-            from pathlib import Path
-
-            p = Path(args.json)
-            p.parent.mkdir(parents=True, exist_ok=True)
-            p.write_text(json.dumps({
-                "bench": "sweep", "suite": args.suite, "backend": backend,
-                "n_bytes": args.n_bytes, "seed": args.seed,
-                "rows": rows,
-            }, indent=2))
-            print(f"wrote {p}")
+            for p in write_artifact(args.json, {
+                    "bench": "sweep", "suite": args.suite, "backend": backend,
+                    "n_bytes": args.n_bytes, "seed": args.seed,
+                    "profile_sets": args.profile_sets,
+                    "rows": rows,
+            }):
+                print(f"wrote {p}")
         return []
 
     try:
@@ -567,15 +659,11 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
         for line in csv_lines(cells):
             print(line)
     if args.json:
-        from pathlib import Path
-
-        p = Path(args.json)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(
-            to_artifact(cells, suite=args.suite,
-                        codecs=args.codec or "gbdi,bdi,fr,fr_xla,fr_kernel",
-                        n_bytes=args.n_bytes, seed=args.seed), indent=2))
-        print(f"wrote {p}")
+        for p in write_artifact(args.json, to_artifact(
+                cells, suite=args.suite,
+                codecs=args.codec or "gbdi,bdi,fr,fr_xla,fr_kernel",
+                n_bytes=args.n_bytes, seed=args.seed)):
+            print(f"wrote {p}")
     bad = [c for c in cells if not c.verified]
     if bad:
         raise SystemExit(f"{len(bad)} cells failed verification: "

@@ -38,9 +38,11 @@ def _gather_chunks(rank, inclass, sub, cap: int):
 
 
 def _decode_kernel(
-    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, bases_ref, cls_ref, x_ref,
-    *, cfg: FRConfig, k_pad: int,
+    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, *refs,
+    cfg: FRConfig, k_pad: int,
 ):
+    prof_ref = refs[0] if cfg.num_profiles > 1 else None
+    bases_ref, cls_ref, x_ref = refs[-3:]
     T, P = x_ref.shape
     cap_out, wb = cfg.outlier_cap, cfg.word_bits
     bases = bases_ref[...][0]                              # (k_pad,)
@@ -62,19 +64,31 @@ def _decode_kernel(
     cls_w = (onehot_b * cls[None, None, :]).sum(axis=2)
 
     # per-class sub-stream gather at the recomputed page-order ranks
-    delta = jnp.zeros((T, P), jnp.int32)
     packed = delta_ref[...]
-    for i, (w, cap, off) in enumerate(
-        zip(cfg.width_set, cfg.bucket_caps, cfg.class_lane_offsets)
-    ):
-        if cap == 0:
-            continue
-        sub = unpack(packed[:, off:off + cap * w // 32], w, cap).astype(jnp.int32)
-        half = 1 << (w - 1)
-        sub = jnp.where(sub >= half, sub - (1 << w), sub)
-        inclass = active & (cls_w == i)
-        rank = _cumsum_lanes(inclass.astype(jnp.int32)) - 1
-        delta = delta + _gather_chunks(rank, inclass, sub, cap)
+
+    def gather_deltas(profile: int):
+        delta = jnp.zeros((T, P), jnp.int32)
+        for i, (w, cap, off) in enumerate(
+            zip(cfg.width_set, cfg.profiles[profile],
+                cfg.class_lane_offsets_for(profile))
+        ):
+            if cap == 0:
+                continue
+            sub = unpack(packed[:, off:off + cap * w // 32], w, cap).astype(jnp.int32)
+            half = 1 << (w - 1)
+            sub = jnp.where(sub >= half, sub - (1 << w), sub)
+            inclass = active & (cls_w == i)
+            rank = _cumsum_lanes(inclass.astype(jnp.int32)) - 1
+            delta = delta + _gather_chunks(rank, inclass, sub, cap)
+        return delta
+
+    if cfg.num_profiles == 1:
+        delta = gather_deltas(0)
+    else:   # per-page profile id selects the sub-stream layout
+        pid = prof_ref[...]                                # (T, 1)
+        delta = jnp.zeros((T, P), jnp.int32)
+        for p in range(cfg.num_profiles):
+            delta = jnp.where(pid == p, gather_deltas(p), delta)
 
     val = base_val + delta
     if wb == 16:
@@ -111,22 +125,28 @@ def gbdi_decode_pallas(
     k_pad = k_padded(cfg)
     bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
     kernel = functools.partial(_decode_kernel, cfg=cfg, k_pad=k_pad)
+    in_specs = [
+        pl.BlockSpec((T, cfg.ptr_lanes), lambda i: (i, 0)),
+        pl.BlockSpec((T, cfg.delta_lanes), lambda i: (i, 0)),
+        pl.BlockSpec((T, cap), lambda i: (i, 0)),
+        pl.BlockSpec((T, cap), lambda i: (i, 0)),
+        pl.BlockSpec((T, 1), lambda i: (i, 0)),
+    ]
+    args = [blob["ptrs"], blob["deltas"], blob["out_vals"], blob["out_idx"],
+            blob["n_out"][:, None]]
+    if cfg.num_profiles > 1:   # adaptive: per-page profile id input
+        in_specs.append(pl.BlockSpec((T, 1), lambda i: (i, 0)))
+        args.append(blob["profile"][:, None])
+    in_specs += [
+        pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+        pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+    ]
+    args += [bases_p, cls_p]
     return pl.pallas_call(
         kernel,
         grid=(n_pages // T,),
-        in_specs=[
-            pl.BlockSpec((T, cfg.ptr_lanes), lambda i: (i, 0)),
-            pl.BlockSpec((T, cfg.delta_lanes), lambda i: (i, 0)),
-            pl.BlockSpec((T, cap), lambda i: (i, 0)),
-            pl.BlockSpec((T, cap), lambda i: (i, 0)),
-            pl.BlockSpec((T, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
-            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((T, P), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pages, P), jnp.int32),
         interpret=interpret,
-    )(
-        blob["ptrs"], blob["deltas"], blob["out_vals"], blob["out_idx"],
-        blob["n_out"][:, None], bases_p, cls_p,
-    )
+    )(*args)

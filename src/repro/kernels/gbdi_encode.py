@@ -51,9 +51,13 @@ def vmem_tile_bytes(cfg: FRConfig, pages_per_tile: int) -> int:
     cube = T * P * k_padded(cfg) * w            # delta/magnitude/cost cubes
     chunk = T * P * SLOT_CHUNK * w              # compaction one-hot + product
     out_oh = T * P * cfg.outlier_cap * w        # outlier table one-hot
-    io = T * P * w + T * (cfg.ptr_lanes + cfg.delta_lanes + 2 * cfg.outlier_cap + 3) * w
+    blob = T * (cfg.ptr_lanes + cfg.delta_lanes + 2 * cfg.outlier_cap + 3) * w
+    io = T * P * w + blob
     scratch = 8 * T * P * w                     # codes/ranks/masks etc.
-    return io + 3 * cube + 2 * chunk + out_oh + scratch
+    # adaptive profiles: every candidate blob (plus its code/mask planes)
+    # is retained until the per-page select; transient chunks are reused
+    held = (cfg.num_profiles - 1) * (blob + 2 * T * P * w)
+    return io + 3 * cube + 2 * chunk + out_oh + scratch + held
 
 
 def _check_vmem(cfg: FRConfig, pages_per_tile: int) -> None:
@@ -112,10 +116,10 @@ def _compact_chunks(rank, keep, payload, cap: int):
 
 
 def _encode_kernel(
-    x_ref, bases_ref, cls_ref,
-    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, nspill_ref, ndrop_ref,
-    *, cfg: FRConfig, k_pad: int,
+    x_ref, bases_ref, cls_ref, *out_refs, cfg: FRConfig, k_pad: int,
 ):
+    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, nspill_ref, ndrop_ref = out_refs[:7]
+    prof_ref = out_refs[7] if cfg.num_profiles > 1 else None
     x = x_ref[...]                                   # (T, P) int32
     bases = bases_ref[...][0]                        # (k_pad,) int32
     cls = cls_ref[...][0]                            # (k_pad,) width-class idx
@@ -134,49 +138,11 @@ def _encode_kernel(
     widths = _class_map(cls, cfg.width_set)
     cost = jnp.where(fits, widths[None, None, :], BIG)   # (T, P, k_pad)
 
-    sel = jnp.argmin(cost, axis=2).astype(jnp.int32)
-    found = jnp.take_along_axis(cost, sel[:, :, None], axis=2)[:, :, 0] <= wb
+    sel0 = jnp.argmin(cost, axis=2).astype(jnp.int32)
+    found = jnp.take_along_axis(cost, sel0[:, :, None], axis=2)[:, :, 0] <= wb
     is_zero = x == 0
-    active = found & ~is_zero
-    out_cand = (~found) & (~is_zero)
-
-    # narrow -> wide bucketing + spill chain (matches the oracle bit-for-bit)
-    subs, n_spilled = [], jnp.zeros((T,), jnp.int32)
-    for i, (w, cap) in enumerate(zip(cfg.width_set, cfg.bucket_caps)):
-        oh_sel = (sel[:, :, None] == jnp.arange(k_pad)[None, None, :]).astype(jnp.int32)
-        cls_sel = (oh_sel * cls[None, None, :]).sum(axis=2)
-        inclass = active & (cls_sel == i)
-        rank = _cumsum_lanes(inclass.astype(jnp.int32)) - 1
-        keep = inclass & (rank < cap)
-        over = inclass & ~keep
-        delta = jnp.take_along_axis(d, sel[:, :, None], axis=2)[:, :, 0]
-        payload = (jnp.where(keep, delta, 0) & ((1 << w) - 1)).astype(jnp.int32)
-        sub = _compact_chunks(rank, keep, payload, cap) if cap else jnp.zeros((T, 0), jnp.int32)
-        subs.append(sub)
-        wcost = jnp.where(cls[None, None, :] > i, cost, BIG)
-        alt = jnp.argmin(wcost, axis=2).astype(jnp.int32)
-        alt_ok = jnp.take_along_axis(wcost, alt[:, :, None], axis=2)[:, :, 0] <= wb
-        sel = jnp.where(over & alt_ok, alt, sel)
-        n_spilled = n_spilled + (over & alt_ok).sum(axis=1, dtype=jnp.int32)
-        newly_out = over & ~alt_ok
-        active = active & ~newly_out
-        out_cand = out_cand | newly_out
-
-    # outlier compaction (one-hot, scatter-free); overflow = dropped -> code
-    # stays outlier with no slot (decodes to 0)
-    pos = _cumsum_lanes(out_cand.astype(jnp.int32)) - 1
-    in_table = out_cand & (pos < cap_out)
-    dropped = out_cand & ~in_table
-    slots = jnp.arange(cap_out, dtype=jnp.int32)
-    onehot = ((pos[:, :, None] == slots[None, None, :]) & in_table[:, :, None]).astype(jnp.int32)
-    oval_ref[...] = (onehot * x[:, :, None]).sum(axis=1)
-    oidx_ref[...] = (onehot * jnp.arange(P, dtype=jnp.int32)[None, :, None]).sum(axis=1)
-    nout_ref[...] = jnp.minimum(out_cand.sum(axis=1, dtype=jnp.int32), cap_out)[:, None]
-    nspill_ref[...] = n_spilled[:, None]
-    ndrop_ref[...] = dropped.sum(axis=1, dtype=jnp.int32)[:, None]
-
-    code = jnp.where(is_zero, jnp.int32(cfg.zero_code), sel)
-    code = jnp.where(out_cand, jnp.int32(cfg.outlier_code), code)
+    active0 = found & ~is_zero
+    out_cand0 = (~found) & (~is_zero)
 
     # lane packing: shifts + adds (fields are disjoint)
     def pack(vals, bits):
@@ -185,10 +151,86 @@ def _encode_kernel(
         sh = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, None, :]
         return (y << sh).sum(axis=2, dtype=jnp.uint32).astype(jnp.int32)
 
-    ptr_ref[...] = pack(code.astype(jnp.uint32), cfg.ptr_bits)
-    delta_ref[...] = jnp.concatenate(
-        [pack(s, w) for s, w in zip(subs, cfg.width_set) if s.shape[1]], axis=1
-    )
+    def run_profile(caps):
+        """Bucketing + spill chain under one cap profile (oracle parity)."""
+        sel, active, out_cand = sel0, active0, out_cand0
+        subs, n_spilled = [], jnp.zeros((T,), jnp.int32)
+        for i, (w, cap) in enumerate(zip(cfg.width_set, caps)):
+            oh_sel = (sel[:, :, None] == jnp.arange(k_pad)[None, None, :]).astype(jnp.int32)
+            cls_sel = (oh_sel * cls[None, None, :]).sum(axis=2)
+            inclass = active & (cls_sel == i)
+            rank = _cumsum_lanes(inclass.astype(jnp.int32)) - 1
+            keep = inclass & (rank < cap)
+            over = inclass & ~keep
+            delta = jnp.take_along_axis(d, sel[:, :, None], axis=2)[:, :, 0]
+            payload = (jnp.where(keep, delta, 0) & ((1 << w) - 1)).astype(jnp.int32)
+            sub = _compact_chunks(rank, keep, payload, cap) if cap else jnp.zeros((T, 0), jnp.int32)
+            subs.append(sub)
+            wcost = jnp.where(cls[None, None, :] > i, cost, BIG)
+            alt = jnp.argmin(wcost, axis=2).astype(jnp.int32)
+            alt_ok = jnp.take_along_axis(wcost, alt[:, :, None], axis=2)[:, :, 0] <= wb
+            sel = jnp.where(over & alt_ok, alt, sel)
+            n_spilled = n_spilled + (over & alt_ok).sum(axis=1, dtype=jnp.int32)
+            newly_out = over & ~alt_ok
+            active = active & ~newly_out
+            out_cand = out_cand | newly_out
+
+        # outlier compaction (one-hot, scatter-free); overflow = dropped ->
+        # code stays outlier with no slot (decodes to 0)
+        pos = _cumsum_lanes(out_cand.astype(jnp.int32)) - 1
+        in_table = out_cand & (pos < cap_out)
+        dropped = out_cand & ~in_table
+        slots = jnp.arange(cap_out, dtype=jnp.int32)
+        onehot = ((pos[:, :, None] == slots[None, None, :]) & in_table[:, :, None]).astype(jnp.int32)
+        code = jnp.where(is_zero, jnp.int32(cfg.zero_code), sel)
+        code = jnp.where(out_cand, jnp.int32(cfg.outlier_code), code)
+        deltas = jnp.concatenate(
+            [pack(s, w) for s, w in zip(subs, cfg.width_set) if s.shape[1]], axis=1
+        )
+        deltas = jnp.pad(deltas, ((0, 0), (0, cfg.delta_lanes - deltas.shape[1])))
+        return {
+            "ptrs": pack(code.astype(jnp.uint32), cfg.ptr_bits),
+            "deltas": deltas,
+            "out_vals": (onehot * x[:, :, None]).sum(axis=1),
+            "out_idx": (onehot * jnp.arange(P, dtype=jnp.int32)[None, :, None]).sum(axis=1),
+            "n_out": jnp.minimum(out_cand.sum(axis=1, dtype=jnp.int32), cap_out),
+            "n_spilled": n_spilled,
+            "n_dropped": dropped.sum(axis=1, dtype=jnp.int32),
+        }
+
+    cands = [run_profile(caps) for caps in cfg.profiles]
+    if cfg.num_profiles == 1:
+        blob, pid = cands[0], None
+    else:
+        # per-page argmin of the effective encoded size, first-wins ties —
+        # identical cost + tie-break to cfg.profile_cost_bits (oracle/xla)
+        costs = [jnp.int32(cfg.drop_penalty_bits) * b["n_dropped"]
+                 + jnp.int32(8 * cfg.compressed_bytes_for_profile(p))
+                 for p, b in enumerate(cands)]
+        best, pid = costs[0], jnp.zeros((T,), jnp.int32)
+        for p in range(1, cfg.num_profiles):
+            better = costs[p] < best
+            best = jnp.where(better, costs[p], best)
+            pid = jnp.where(better, jnp.int32(p), pid)
+
+        def select(field):
+            acc = cands[0][field]
+            sel_pid = pid[:, None] if acc.ndim == 2 else pid
+            for p in range(1, cfg.num_profiles):
+                acc = jnp.where(sel_pid == p, cands[p][field], acc)
+            return acc
+
+        blob = {k: select(k) for k in cands[0]}
+
+    oval_ref[...] = blob["out_vals"]
+    oidx_ref[...] = blob["out_idx"]
+    nout_ref[...] = blob["n_out"][:, None]
+    nspill_ref[...] = blob["n_spilled"][:, None]
+    ndrop_ref[...] = blob["n_dropped"][:, None]
+    ptr_ref[...] = blob["ptrs"]
+    delta_ref[...] = blob["deltas"]
+    if prof_ref is not None:
+        prof_ref[...] = pid[:, None]
 
 
 @functools.partial(
@@ -214,7 +256,7 @@ def gbdi_encode_pallas(
     bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
 
     grid = (n_pages // T,)
-    out_shapes = (
+    out_shapes = [
         jax.ShapeDtypeStruct((n_pages, cfg.ptr_lanes), jnp.int32),
         jax.ShapeDtypeStruct((n_pages, cfg.delta_lanes), jnp.int32),
         jax.ShapeDtypeStruct((n_pages, cap), jnp.int32),
@@ -222,9 +264,21 @@ def gbdi_encode_pallas(
         jax.ShapeDtypeStruct((n_pages, 1), jnp.int32),
         jax.ShapeDtypeStruct((n_pages, 1), jnp.int32),
         jax.ShapeDtypeStruct((n_pages, 1), jnp.int32),
-    )
+    ]
+    out_specs = [
+        pl.BlockSpec((T, cfg.ptr_lanes), lambda i: (i, 0)),
+        pl.BlockSpec((T, cfg.delta_lanes), lambda i: (i, 0)),
+        pl.BlockSpec((T, cap), lambda i: (i, 0)),
+        pl.BlockSpec((T, cap), lambda i: (i, 0)),
+        pl.BlockSpec((T, 1), lambda i: (i, 0)),
+        pl.BlockSpec((T, 1), lambda i: (i, 0)),
+        pl.BlockSpec((T, 1), lambda i: (i, 0)),
+    ]
+    if cfg.num_profiles > 1:   # adaptive: per-page profile id rides along
+        out_shapes.append(jax.ShapeDtypeStruct((n_pages, 1), jnp.int32))
+        out_specs.append(pl.BlockSpec((T, 1), lambda i: (i, 0)))
     kernel = functools.partial(_encode_kernel, cfg=cfg, k_pad=k_pad)
-    ptrs, deltas, out_vals, out_idx, n_out, n_spilled, n_dropped = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -232,20 +286,13 @@ def gbdi_encode_pallas(
             pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
             pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
         ],
-        out_specs=(
-            pl.BlockSpec((T, cfg.ptr_lanes), lambda i: (i, 0)),
-            pl.BlockSpec((T, cfg.delta_lanes), lambda i: (i, 0)),
-            pl.BlockSpec((T, cap), lambda i: (i, 0)),
-            pl.BlockSpec((T, cap), lambda i: (i, 0)),
-            pl.BlockSpec((T, 1), lambda i: (i, 0)),
-            pl.BlockSpec((T, 1), lambda i: (i, 0)),
-            pl.BlockSpec((T, 1), lambda i: (i, 0)),
-        ),
-        out_shape=out_shapes,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes),
         interpret=interpret,
     )(x_pages, bases_p, cls_p)
+    ptrs, deltas, out_vals, out_idx, n_out, n_spilled, n_dropped = outs[:7]
     # match the oracle's blob layout
-    return {
+    blob = {
         "ptrs": ptrs,
         "deltas": deltas,
         "out_vals": out_vals,
@@ -254,3 +301,6 @@ def gbdi_encode_pallas(
         "n_spilled": n_spilled[:, 0],
         "n_dropped": n_dropped[:, 0],
     }
+    if cfg.num_profiles > 1:
+        blob["profile"] = outs[7][:, 0]
+    return blob

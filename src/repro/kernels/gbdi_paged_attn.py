@@ -129,6 +129,10 @@ def paged_attention_decode(
     B, n_slots = pages_k["ptrs"].shape[:2]
     pt = cfg.page_words // (n_kv * hd)
     assert pt >= 1 and cfg.page_words % (n_kv * hd) == 0
+    # the streaming kernel decodes with the static profile-0 layout; the
+    # serving KV configs are single-profile (adaptive pages go through
+    # kernels.xla.paged_attention_decode, which selects per page)
+    assert cfg.num_profiles == 1, "Pallas paged-attn needs a single-profile cfg"
     k_pad = k_padded(cfg)
     bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
     pos_arr = jnp.full((1, 1), pos, jnp.int32)

@@ -36,6 +36,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import format as fmt
 from repro.core.format import as_base_table
@@ -54,7 +55,7 @@ class PreparedTable(NamedTuple):
 # memoized table -> device constants
 # ---------------------------------------------------------------------------
 
-_PREP_CACHE: "OrderedDict[tuple, tuple[object, PreparedTable]]" = OrderedDict()
+_PREP_CACHE: "OrderedDict[tuple, PreparedTable]" = OrderedDict()
 _PREP_STATS = {"hits": 0, "misses": 0}
 _PREP_CAP = 32
 
@@ -66,13 +67,50 @@ def _build_prepared(table, cfg: FRConfig) -> PreparedTable:
     return PreparedTable(bases, widths, fmt.class_indices(widths, cfg.width_set))
 
 
+_DIGEST_CACHE: "OrderedDict[int, tuple[object, tuple]]" = OrderedDict()
+_DIGEST_CAP = 64
+
+
+def _leaf_digest(leaf) -> tuple:
+    """(sha1 of bytes, shape, dtype) of one table leaf, memoized per leaf
+    *object* so the device->host copy + hash is paid once per table, not
+    once per dispatch.  The memo pins the leaf, so its ``id()`` cannot be
+    recycled while the entry lives (the ``is`` check is belt-and-braces).
+    Arrays are immutable in jax; callers holding numpy tables must not
+    mutate them in place."""
+    key = id(leaf)
+    hit = _DIGEST_CACHE.get(key)
+    if hit is not None and hit[0] is leaf:
+        _DIGEST_CACHE.move_to_end(key)
+        return hit[1]
+    import hashlib
+
+    a = np.ascontiguousarray(np.asarray(leaf))
+    dig = (hashlib.sha1(a.tobytes()).hexdigest(), a.shape, str(a.dtype))
+    _DIGEST_CACHE[key] = (leaf, dig)
+    while len(_DIGEST_CACHE) > _DIGEST_CAP:
+        _DIGEST_CACHE.popitem(last=False)
+    return dig
+
+
+def _table_digest(leaves) -> tuple:
+    """Content key for a table's leaves (tables are tiny: k <= 254 int32
+    pairs).  Unlike a bare ``id()`` key this is self-describing — equal-
+    content tables (e.g. a refit landing on identical values, or the same
+    table rebuilt each step) share one prepared entry, and correctness no
+    longer depends on the cache pinning every keyed object alive."""
+    return tuple(_leaf_digest(leaf) for leaf in leaves)
+
+
 def prepare_table(table, cfg: FRConfig) -> PreparedTable:
     """Memoized BaseTable -> :class:`PreparedTable` conversion.
 
-    Keyed by the identity of the table's leaves (the cache pins a strong
-    reference, so ids stay valid) plus the config fields the constants
-    depend on.  Arrays are immutable in jax, so identity implies content —
-    callers holding numpy tables must not mutate them in place.
+    Keyed by the *content* of the table's leaves (digest of bytes + shape
+    + dtype, memoized per leaf object) plus the config fields the
+    constants depend on.  The previous ``id()`` key was safe only because
+    the cache pinned every keyed table alive — an invariant one refactor
+    away from an alias-after-GC stale hit; the content key removes that
+    coupling and is regression-locked in ``tests/test_xla_backend.py``.
     """
     if isinstance(table, PreparedTable):
         return table
@@ -82,16 +120,16 @@ def prepare_table(table, cfg: FRConfig) -> PreparedTable:
     if (any(isinstance(leaf, jax.core.Tracer) for leaf in leaves)
             or not jax.core.trace_state_clean()):
         return _build_prepared(table, cfg)
-    key = (tuple(id(leaf) for leaf in leaves), type(table).__name__,
+    key = (_table_digest(leaves), type(table).__name__,
            cfg.width_set, cfg.word_bits, cfg.widest_bits)
     hit = _PREP_CACHE.get(key)
     if hit is not None:
         _PREP_STATS["hits"] += 1
         _PREP_CACHE.move_to_end(key)
-        return hit[1]
+        return hit
     _PREP_STATS["misses"] += 1
     prep = _build_prepared(table, cfg)
-    _PREP_CACHE[key] = (table, prep)
+    _PREP_CACHE[key] = prep
     while len(_PREP_CACHE) > _PREP_CAP:
         _PREP_CACHE.popitem(last=False)
     return prep
@@ -104,6 +142,7 @@ def table_cache_info() -> dict[str, int]:
 
 def table_cache_clear() -> None:
     _PREP_CACHE.clear()
+    _DIGEST_CACHE.clear()
     _PREP_STATS["hits"] = _PREP_STATS["misses"] = 0
 
 
@@ -139,26 +178,20 @@ def _compact(mask: jax.Array, vals: jax.Array, csum: jax.Array, cap: int):
     return jnp.where(live, out, 0), jnp.where(live, pos, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _encode_batch(x: jax.Array, prep: PreparedTable, cfg: FRConfig) -> dict[str, jax.Array]:
+def _bucket_batch(
+    x: jax.Array, d: jax.Array, cost: jax.Array, cls: jax.Array, known: jax.Array,
+    sel: jax.Array, active: jax.Array, out_cand: jax.Array, is_zero: jax.Array,
+    caps: tuple[int, ...], cfg: FRConfig,
+) -> dict[str, jax.Array]:
+    """Batched spill chain + compaction under one bucket-cap profile —
+    the (N, P) twin of ``gbdi_fr._bucket_page``, pure in its mask args so
+    the adaptive encoder evaluates every profile from one assignment."""
     N, P = x.shape
     wb, cap_out = cfg.word_bits, cfg.outlier_cap
-    bases, widths, cls = prep
-
-    d = _wrapped_delta_b(x, bases, wb)                          # (N, P, k)
-    halfs = jnp.left_shift(jnp.int32(1), widths - 1)
-    fits = jnp.maximum(d, -d - 1) < halfs[None, None, :]        # INT_MIN-safe |d|
-    known = cls < cfg.num_classes
     BIG = jnp.int32(wb + 1)
-    cost = jnp.where(fits & known[None, None, :], widths[None, None, :], BIG)
-    sel = jnp.argmin(cost, axis=2).astype(jnp.int32)            # (N, P)
-    found = jnp.take_along_axis(cost, sel[..., None], axis=2)[..., 0] <= wb
-    is_zero = x == 0
-    active = found & ~is_zero
-    out_cand = (~found) & (~is_zero)
 
     subs, n_spilled = [], jnp.zeros((N,), jnp.int32)
-    for i, (w, cap) in enumerate(zip(cfg.width_set, cfg.bucket_caps)):
+    for i, (w, cap) in enumerate(zip(cfg.width_set, caps)):
         inclass = active & (cls[sel] == i)
         csum = jnp.cumsum(inclass.astype(jnp.int32), axis=1)
         # static shortcut: a full-page bucket (the KV/GRAD single-width
@@ -192,16 +225,59 @@ def _encode_batch(x: jax.Array, prep: PreparedTable, cfg: FRConfig) -> dict[str,
 
     code = jnp.where(is_zero, jnp.int32(cfg.zero_code), sel)
     code = jnp.where(out_cand, jnp.int32(cfg.outlier_code), code)
+    deltas = (jnp.concatenate(subs, axis=1) if subs
+              else jnp.zeros((N, 0), jnp.int32))
+    deltas = jnp.pad(deltas, ((0, 0), (0, cfg.delta_lanes - deltas.shape[1])))
     return {
         "ptrs": pack_lanes(code.astype(jnp.uint32), cfg.ptr_bits),
-        "deltas": (jnp.concatenate(subs, axis=1) if subs
-                   else jnp.zeros((N, 0), jnp.int32)),
+        "deltas": deltas,
         "out_vals": out_vals,
         "out_idx": out_idx,
         "n_out": jnp.minimum(out_cand.sum(axis=1, dtype=jnp.int32), cap_out),
         "n_spilled": n_spilled,
         "n_dropped": dropped.sum(axis=1, dtype=jnp.int32),
     }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _encode_batch(x: jax.Array, prep: PreparedTable, cfg: FRConfig) -> dict[str, jax.Array]:
+    wb = cfg.word_bits
+    bases, widths, cls = prep
+
+    d = _wrapped_delta_b(x, bases, wb)                          # (N, P, k)
+    halfs = jnp.left_shift(jnp.int32(1), widths - 1)
+    fits = jnp.maximum(d, -d - 1) < halfs[None, None, :]        # INT_MIN-safe |d|
+    known = cls < cfg.num_classes
+    BIG = jnp.int32(wb + 1)
+    cost = jnp.where(fits & known[None, None, :], widths[None, None, :], BIG)
+    sel = jnp.argmin(cost, axis=2).astype(jnp.int32)            # (N, P)
+    found = jnp.take_along_axis(cost, sel[..., None], axis=2)[..., 0] <= wb
+    is_zero = x == 0
+    active = found & ~is_zero
+    out_cand = (~found) & (~is_zero)
+
+    # demand probe (batched): bucket every page under every profile from
+    # the same assignment state; keep the per-page argmin of the effective
+    # encoded size (same cost + tie-break as the oracle — bit parity)
+    cands = [
+        _bucket_batch(x, d, cost, cls, known, sel, active, out_cand, is_zero,
+                      caps, cfg)
+        for caps in cfg.profiles
+    ]
+    if cfg.num_profiles == 1:
+        return cands[0]
+    costs = jnp.stack([cfg.profile_cost_bits(p, b["n_dropped"])
+                       for p, b in enumerate(cands)])           # (nP, N)
+    pid = jnp.argmin(costs, axis=0).astype(jnp.int32)           # (N,)
+
+    def pick(field: str) -> jax.Array:
+        stacked = jnp.stack([b[field] for b in cands])          # (nP, N, ...)
+        idx = pid.reshape((1, -1) + (1,) * (stacked.ndim - 2))
+        return jnp.take_along_axis(stacked, idx, axis=0)[0]
+
+    blob = {k: pick(k) for k in cands[0]}
+    blob["profile"] = pid
+    return blob
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -216,19 +292,30 @@ def _decode_batch(blob: dict[str, jax.Array], prep: PreparedTable, cfg: FRConfig
     base_code = jnp.clip(code, 0, cfg.num_bases - 1)
     cls_w = cls[base_code]
 
-    delta = jnp.zeros((N, P), jnp.int32)
-    for i, (w, cap, off) in enumerate(
-        zip(cfg.width_set, cfg.bucket_caps, cfg.class_lane_offsets)
-    ):
-        if cap == 0:
-            continue
-        sub = unpack_lanes(blob["deltas"][:, off:off + cap * w // 32], w, cap).astype(jnp.int32)
-        half = 1 << (w - 1)
-        sub = jnp.where(sub >= half, sub - (1 << w), sub)
-        inclass = active & (cls_w == i)
-        rank = jnp.cumsum(inclass.astype(jnp.int32), axis=1) - 1
-        gathered = jnp.take_along_axis(sub, jnp.clip(rank, 0, cap - 1), axis=1)
-        delta = jnp.where(inclass, gathered, delta)
+    def gather_deltas(profile: int) -> jax.Array:
+        delta = jnp.zeros((N, P), jnp.int32)
+        for i, (w, cap, off) in enumerate(
+            zip(cfg.width_set, cfg.profiles[profile],
+                cfg.class_lane_offsets_for(profile))
+        ):
+            if cap == 0:
+                continue
+            sub = unpack_lanes(blob["deltas"][:, off:off + cap * w // 32], w, cap).astype(jnp.int32)
+            half = 1 << (w - 1)
+            sub = jnp.where(sub >= half, sub - (1 << w), sub)
+            inclass = active & (cls_w == i)
+            rank = jnp.cumsum(inclass.astype(jnp.int32), axis=1) - 1
+            gathered = jnp.take_along_axis(sub, jnp.clip(rank, 0, cap - 1), axis=1)
+            delta = jnp.where(inclass, gathered, delta)
+        return delta
+
+    if cfg.num_profiles == 1:
+        delta = gather_deltas(0)
+    else:   # per-page profile id selects the sub-stream layout
+        pid = blob["profile"][:, None]
+        delta = jnp.zeros((N, P), jnp.int32)
+        for p in range(cfg.num_profiles):
+            delta = jnp.where(pid == p, gather_deltas(p), delta)
 
     val = bases[base_code] + delta
     if wb == 16:
@@ -251,9 +338,10 @@ def _decode_batch(blob: dict[str, jax.Array], prep: PreparedTable, cfg: FRConfig
 # public entry points (arbitrary leading batch axes)
 # ---------------------------------------------------------------------------
 
-#: trailing (non-batch) dims per blob field
+#: trailing (non-batch) dims per blob field ("profile" only exists for
+#: multi-profile configs)
 BLOB_TRAILING = {"ptrs": 1, "deltas": 1, "out_vals": 1, "out_idx": 1,
-                 "n_out": 0, "n_spilled": 0, "n_dropped": 0}
+                 "n_out": 0, "n_spilled": 0, "n_dropped": 0, "profile": 0}
 
 
 def encode_pages(x_pages: jax.Array, table, cfg: FRConfig) -> dict[str, jax.Array]:

@@ -19,9 +19,12 @@ occur and base coverage matches v1 exactly — multi-width fits pair some
 bases with the 4-bit class, which shrinks coverage and overflows the
 outlier table on realistic KV distributions (words then decode to 0).
 Multi-width configs remain available per-``KVSpec`` for workloads whose
-measured demand fits (see ``repro.eval.run --sweep``).  Note the
-per-page ``n_spilled``/``n_dropped`` diagnostics are discarded at flush
-(static cache tree); measure them offline via ``fr_encode`` if needed.
+measured demand fits (see ``repro.eval.run --sweep``), and adaptive
+``cap_profiles`` configs carry their per-page profile id in the cache
+tree (the compiled xla attention path selects per page; the fused Pallas
+kernel requires a single-profile cfg).  Note the per-page
+``n_spilled``/``n_dropped`` diagnostics are discarded at flush (static
+cache tree); measure them offline via ``fr_encode`` if needed.
 
 A page holds ``page_tokens = page_words // (Kv*hd)`` consecutive tokens'
 K (or V) values.  Appends go to the raw tail; when the tail fills, it is
@@ -86,13 +89,16 @@ def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> dict:
     n_slots = spec.n_pages * pages_per_row
 
     def page_zeros():
-        return {
+        z = {
             "ptrs": jnp.zeros((batch, n_slots, fr.ptr_lanes), jnp.int32),
             "deltas": jnp.zeros((batch, n_slots, fr.delta_lanes), jnp.int32),
             "out_vals": jnp.zeros((batch, n_slots, fr.outlier_cap), jnp.int32),
             "out_idx": jnp.zeros((batch, n_slots, fr.outlier_cap), jnp.int32),
             "n_out": jnp.zeros((batch, n_slots), jnp.int32),
         }
+        if fr.num_profiles > 1:   # adaptive cfg: per-page profile ids
+            z["profile"] = jnp.zeros((batch, n_slots), jnp.int32)
+        return z
 
     tail = jnp.zeros((batch, spec.page_tokens, spec.n_kv, spec.head_dim), jnp.bfloat16)
     return {"k_pages": page_zeros(), "v_pages": page_zeros(),

@@ -33,15 +33,22 @@ def test_example_page_roundtrips_outside_drops():
     assert mism.size == 1 and got[mism[0]] == 0    # exactly the dropped word
 
 
-def test_serialized_page_is_fixed_rate():
+def test_serialized_page_sizes_follow_selected_profile():
     cfg, blob = format_doc.encode_example()
     page = format_doc.serialize_page(blob, cfg)
-    assert len(page) == cfg.compressed_bytes_per_page() == 80
-    # zero page serializes deterministically (all-zero codes lane = zero_code
-    # pattern, empty buckets zero-filled)
+    # worked page keeps profile 0 (exactness-first probe): 81 bytes incl.
+    # the 1-byte profile header; the static buffer bound is the max profile
+    assert int(np.asarray(blob["profile"])) == 0
+    assert len(page) == cfg.compressed_bytes_for_profile(0) == 81
+    assert cfg.compressed_bytes_per_page() == 81
+    assert page[0] == 0                            # profile id header byte
+    # zero page serializes deterministically and picks the *smaller*
+    # narrow-heavy profile 1 (nothing drops, size wins): 77 bytes
     zero_blob = {k: np.asarray(v)[0] for k, v in fr_encode(
         np.zeros((1, cfg.page_words), np.int32), format_doc.example_table(),
         cfg).items()}
+    assert int(zero_blob["profile"]) == 1
     a = format_doc.serialize_page(zero_blob, cfg)
     b = format_doc.serialize_page(zero_blob, cfg)
-    assert a == b and len(a) == 80
+    assert a == b and len(a) == cfg.compressed_bytes_for_profile(1) == 77
+    assert a[0] == 1

@@ -108,13 +108,19 @@ PARITY_CFGS = [
     # spill-heavy corner: tiny buckets force the whole chain
     FRConfig(word_bits=16, page_words=128, num_bases=6, width_set=(2, 4, 8),
              bucket_caps=(16, 8, 8), outlier_cap=4),
+    # adaptive profiles, incl. a forced-spill profile (8, 8)
+    FRConfig(word_bits=16, page_words=256, num_bases=6, width_set=(4, 8),
+             cap_profiles=((64, 192), (192, 64), (8, 8)), outlier_cap=16),
 ]
 
 
-@pytest.mark.parametrize(
-    "cfg", PARITY_CFGS,
-    ids=lambda c: f"wb{c.word_bits}_w{'-'.join(map(str, c.width_set))}_caps{'-'.join(map(str, c.bucket_caps))}",
-)
+def _cfg_id(c):
+    return (f"wb{c.word_bits}_w{'-'.join(map(str, c.width_set))}"
+            f"_caps{'-'.join(map(str, c.bucket_caps))}"
+            + (f"_p{c.num_profiles}" if c.num_profiles > 1 else ""))
+
+
+@pytest.mark.parametrize("cfg", PARITY_CFGS, ids=_cfg_id)
 def test_cross_backend_blob_parity(cfg):
     """Pallas kernels and the jnp oracle emit bit-identical v2 blobs and
     decodes, including under bucket spill and outlier drop."""
@@ -135,6 +141,185 @@ def test_cross_backend_blob_parity(cfg):
         np.asarray(ops.decode_pages(kb, table, cfg, backend="kernel")),
         np.asarray(fr_decode(rb, table, cfg)),
     )
+
+
+# ---------------------------------------------------------------------------
+# adaptive per-page bucket-cap profiles
+# ---------------------------------------------------------------------------
+
+ADAPTIVE_CFG = FRConfig(word_bits=16, page_words=128, num_bases=6,
+                        width_set=(4, 8),
+                        cap_profiles=((32, 96), (96, 32), (16, 16)),
+                        outlier_cap=8)
+
+
+def _forced(cfg, p):
+    """The adaptive config restricted to profile ``p`` (same page layout
+    prefix: a single-profile config's blob fields are profile p's)."""
+    return FRConfig(word_bits=cfg.word_bits, page_words=cfg.page_words,
+                    num_bases=cfg.num_bases, width_set=cfg.width_set,
+                    bucket_caps=cfg.profiles[p], outlier_cap=cfg.outlier_cap)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_probe_picks_cheapest_profile(seed):
+    """The probe's pick is lexicographically minimal over (n_dropped,
+    serialized bytes, profile id) among *forced* single-profile encodes of
+    the same page, and the emitted counters/fields equal the forced
+    encode's exactly (n_spilled / n_dropped stay exact under adaptivity)."""
+    cfg = ADAPTIVE_CFG
+    rng = np.random.default_rng(seed)
+    centers = rng.integers(200, 2**16 - 200, cfg.num_bases)
+    spread = int(rng.integers(2, 160))
+    w = (centers[rng.integers(0, cfg.num_bases, (3, cfg.page_words))]
+         + rng.integers(-spread, spread + 1, (3, cfg.page_words)))
+    w[rng.random((3, cfg.page_words)) < 0.3] = 0
+    x = jnp.asarray((w & 0xFFFF).astype(np.int64), dtype=jnp.int32)
+    table = fit_fr_bases(x, cfg)
+    blob = fr_encode(x, table, cfg)
+    forced = [fr_encode(x, table, _forced(cfg, p))
+              for p in range(cfg.num_profiles)]
+    for page in range(x.shape[0]):
+        keys = [
+            (int(np.asarray(fb["n_dropped"])[page]),
+             cfg.compressed_bytes_for_profile(p), p)
+            for p, fb in enumerate(forced)
+        ]
+        pid = int(np.asarray(blob["profile"])[page])
+        assert keys[pid] == min(keys), (page, pid, keys)
+        fb = forced[pid]
+        for k in ("n_spilled", "n_dropped", "n_out", "ptrs", "out_vals",
+                  "out_idx"):
+            np.testing.assert_array_equal(
+                np.asarray(blob[k])[page], np.asarray(fb[k])[page], err_msg=k)
+        lanes = cfg.delta_lanes_for(pid)
+        np.testing.assert_array_equal(
+            np.asarray(blob["deltas"])[page][:lanes],
+            np.asarray(fb["deltas"])[page], err_msg="deltas")
+        # padding past the selected profile's lanes is zero (serialization
+        # drops it; identical pages must stay byte-identical)
+        assert not np.asarray(blob["deltas"])[page][lanes:].any()
+
+
+def test_adaptive_pages_roundtrip_and_adapt():
+    """Structured pages pick different profiles and still roundtrip within
+    the capacity-bounded contract; an all-zero page picks the smallest."""
+    cfg = ADAPTIVE_CFG
+    table = BaseTable(jnp.asarray([1000, 5000, 9000, 20000, 40000, 60000], jnp.int32),
+                      jnp.asarray([4, 8, 4, 8, 4, 8], jnp.int32))
+    w = np.zeros((4, cfg.page_words), np.int64)
+    w[0, :80] = 1000 + (np.arange(80) % 7) - 3            # narrow-heavy
+    w[1, :80] = 5000 + (np.arange(80) * 17 % 200) - 100   # wide-heavy
+    w[2, :10] = 9000 + (np.arange(10) % 5)                # sparse
+    x = jnp.asarray(w & 0xFFFF, dtype=jnp.int32)
+    blob = fr_encode(x, table, cfg)
+    pids = np.asarray(blob["profile"])
+    assert len(set(pids.tolist())) >= 2, pids             # pages actually adapt
+    # all-zero page: nothing drops anywhere -> smallest serialized profile
+    smallest = min(range(cfg.num_profiles), key=cfg.compressed_bytes_for_profile)
+    assert pids[3] == smallest
+    dec = np.asarray(fr_decode(blob, table, cfg)) & 0xFFFF
+    mism = int((dec != (np.asarray(x) & 0xFFFF)).sum())
+    assert mism <= int(np.asarray(blob["n_dropped"]).sum())
+
+
+def test_class_demand_histogram_predicts_losslessness():
+    """format.class_demand is the demand view behind the probe: whenever a
+    page's per-class histogram fits a profile's caps (and its assign-time
+    outliers fit the table), that profile encodes the page with zero
+    spills and zero drops."""
+    from repro.core.format import assign, class_demand, class_indices
+
+    cfg = ADAPTIVE_CFG
+    rng = np.random.default_rng(7)
+    centers = rng.integers(300, 2**16 - 300, cfg.num_bases)
+    w = (centers[rng.integers(0, cfg.num_bases, (4, cfg.page_words))]
+         + rng.integers(-40, 41, (4, cfg.page_words)))
+    w[rng.random((4, cfg.page_words)) < 0.4] = 0
+    x = jnp.asarray((w & 0xFFFF).astype(np.int64), dtype=jnp.int32)
+    table = fit_fr_bases(x, cfg)
+    cls = class_indices(table.widths, cfg.width_set)
+    checked = 0
+    for page in np.asarray(x):
+        out = assign(jnp.asarray(page), table.bases, table.widths,
+                     word_bits=cfg.word_bits)
+        demand = np.asarray(class_demand(out["code"], cls, cfg.num_classes))
+        n_out = int((np.asarray(out["code"]) == cfg.outlier_code).sum())
+        for p, caps in enumerate(cfg.profiles):
+            if (demand <= np.asarray(caps)).all() and n_out <= cfg.outlier_cap:
+                fb = fr_encode(jnp.asarray(page)[None, :], table,
+                               _forced(cfg, p))
+                assert int(np.asarray(fb["n_spilled"])[0]) == 0, (p, demand)
+                assert int(np.asarray(fb["n_dropped"])[0]) == 0, (p, demand)
+                checked += 1
+    assert checked > 0          # the data must actually exercise the claim
+
+
+def test_frcodec_adaptive_size_accounting_and_histogram():
+    """FRCodec.size_bits integrates per-page profile sizes for adaptive
+    configs, and profile_histogram reports the selection behind it."""
+    from repro.core.gbdi import to_words
+    from repro.eval.codecs import FRCodec
+
+    cfg = ADAPTIVE_CFG
+    rng = np.random.default_rng(3)
+    n_words = cfg.page_words * 3 + 40        # ragged tail page
+    vals = (5000 + rng.integers(-100, 101, n_words)).astype(np.uint16)
+    vals[rng.random(n_words) < 0.5] = 0
+    codec = FRCodec(word_bits=16, backend="ref", cfg=cfg, name="fr_ad")
+    table = codec.fit(vals)
+    blob = codec.encode(vals, table)
+    n_pages = -(-n_words // cfg.page_words)
+    hist = codec.profile_histogram(blob)
+    prof = np.asarray(blob["profile"]).reshape(-1)[:n_pages]
+    assert len(hist) == cfg.num_profiles and sum(hist) == n_pages
+    assert hist == np.bincount(prof, minlength=cfg.num_profiles).tolist()
+    idx_bits = (len(cfg.width_set) - 1).bit_length()
+    expect = (sum(cfg.compressed_bytes_for_profile(int(p)) * 8 for p in prof)
+              + cfg.num_bases * (cfg.word_bits + idx_bits))
+    assert codec.size_bits(blob) == expect
+    dec = np.asarray(codec.decode(blob)).reshape(-1)[:n_words]
+    mism = int((dec != to_words(vals, 16)).sum())
+    assert mism <= codec.dropped_words(blob)
+
+
+def test_probe_cost_overflow_guard():
+    """Configs whose worst-case probe cost would wrap int32 (and silently
+    invert the exactness-first order) are rejected at construction."""
+    with pytest.raises(ValueError, match="overflow"):
+        FRConfig(word_bits=32, page_words=16384, num_bases=6,
+                 width_set=(8, 16),
+                 cap_profiles=((1024, 15360), (2048, 14336)),
+                 outlier_cap=16384)
+
+
+def test_single_profile_blobs_byte_identical_to_pre_profile_format():
+    """Backward compat: a single-profile config must reproduce the
+    pre-adaptive-profile blobs byte-for-byte — golden CRCs recorded from
+    the PR-4 encoder (KV_FR / GRAD_FR and all serialized goldens depend
+    on this)."""
+    import zlib
+
+    from repro.core.format_doc import serialize_page
+
+    cfg = FRConfig(word_bits=16, page_words=256, num_bases=6, width_set=(4, 8),
+                   bucket_caps=(64, 192), outlier_cap=16)
+    table = BaseTable(
+        jnp.asarray([1000, 5000, 9000, 20000, 40000, 60000], jnp.int32),
+        jnp.asarray([4, 8, 4, 8, 4, 8], jnp.int32))
+    rng = np.random.default_rng(42)
+    centers = np.asarray([1000, 5000, 9000, 20000, 40000, 60000])
+    w = (centers[rng.integers(0, 6, (3, 256))] + rng.integers(-120, 120, (3, 256)))
+    w[:, ::7] = 0
+    x = jnp.asarray((w & 0xFFFF).astype(np.int64), dtype=jnp.int32)
+    blob = fr_encode(x, table, cfg)
+    assert "profile" not in blob          # blob structure unchanged
+    crcs = [zlib.crc32(serialize_page({k: np.asarray(v)[i]
+                                       for k, v in blob.items()}, cfg))
+            for i in range(3)]
+    assert crcs == [3381184247, 1710504446, 3996448536], crcs
+    assert cfg.compressed_bytes_per_page() == cfg.compressed_bytes_for_profile(0)
 
 
 def test_v1_compat_config_and_bare_bases():

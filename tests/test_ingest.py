@@ -319,10 +319,9 @@ def test_cli_rejects_duplicate_stems_in_one_batch(corpus, tmp_path):
 
 
 def test_force_reingest_serves_fresh_bytes(tmp_path):
-    """The image LRU is keyed on (path, mtime, size): overwriting a
-    container (--force) must not serve the stale pre-force stream."""
-    import os
-
+    """The image LRU is keyed on (path, size, mtime_ns, tail crc):
+    overwriting a container (--force) must not serve the stale
+    pre-force stream — with no mtime gymnastics required."""
     d = tmp_path / "dumps"
     p1 = tmp_path / "w.npy"
     np.save(p1, np.full(4096, 7, np.uint32))
@@ -330,6 +329,31 @@ def test_force_reingest_serves_fresh_bytes(tmp_path):
     a = default_workloads(str(d)).get("dump:w").generate(4096, 0)
     np.save(p1, np.full(4096, 9, np.uint32))
     ingest.read_tensor_file(p1, name="w").save(d / "w.npz")
-    os.utime(d / "w.npz", ns=(1, 1))   # defeat same-mtime-and-size aliasing
     b = default_workloads(str(d)).get("dump:w").generate(4096, 0)
     assert a[0] == 7 and b[0] == 9
+
+
+def test_same_second_rewrite_serves_fresh_bytes(tmp_path):
+    """Regression: a same-second rewrite of a container (coarse-mtime
+    filesystems report whole-second, equal mtimes; compressed sizes of
+    same-shape payloads readily collide too) used to alias the stale
+    cached image.  The tail-crc component of the freshness stamp must
+    serve the fresh bytes even when size and mtime_ns are both forced
+    identical."""
+    import os
+
+    d = tmp_path / "dumps"
+    p1 = tmp_path / "w.npy"
+    np.save(p1, np.full(4096, 7, np.uint32))
+    ingest.read_tensor_file(p1, name="w").save(d / "w.npz")
+    st = os.stat(d / "w.npz")
+    os.utime(d / "w.npz", ns=(st.st_mtime_ns, st.st_mtime_ns))
+    a = default_workloads(str(d)).get("dump:w").generate(4096, 0)
+    np.save(p1, np.full(4096, 9, np.uint32))
+    ingest.read_tensor_file(p1, name="w").save(d / "w.npz")
+    # simulate the coarse-timestamp worst case: identical mtime_ns
+    os.utime(d / "w.npz", ns=(st.st_mtime_ns, st.st_mtime_ns))
+    st2 = os.stat(d / "w.npz")
+    assert st2.st_mtime_ns == st.st_mtime_ns       # the aliasing precondition
+    b = default_workloads(str(d)).get("dump:w").generate(4096, 0)
+    assert a[0] == 7 and b[0] == 9, (a[0], b[0])

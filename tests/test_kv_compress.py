@@ -46,6 +46,31 @@ def test_append_read_matches_raw():
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=0.25)
 
 
+def test_adaptive_profile_spec_roundtrips_through_cache():
+    """A KVSpec with adaptive cap_profiles carries per-page profile ids in
+    the cache tree and reads back with the same quality as static caps."""
+    spec = kvc.KVSpec(
+        n_kv=KV, head_dim=HD, max_len=64,
+        fr=FRConfig(word_bits=16, page_words=128, width_set=(4, 8),
+                    cap_profiles=((32, 128), (96, 32)), num_bases=14,
+                    outlier_cap=16))
+    n = 8
+    rng = np.random.default_rng(4)
+    ks, vs = _mk_kv(rng, n), _mk_kv(rng, n)
+    w = jax.lax.bitcast_convert_type(jnp.asarray(ks).astype(jnp.bfloat16), jnp.uint16)
+    table = fit_fr_bases(w.astype(jnp.int32).reshape(-1), spec.fr)
+    cache = kvc.init_compressed(spec, B, table)
+    assert "profile" in cache["k_pages"]          # adaptive id in the tree
+    for t in range(n):
+        cache = kvc.append(spec, cache, jnp.asarray(ks[:, t:t+1]),
+                           jnp.asarray(vs[:, t:t+1]), jnp.int32(t))
+    K, V, valid = kvc.read_full(spec, cache, jnp.int32(n - 1))
+    assert bool(valid[:n].all())
+    ref = jnp.asarray(ks[:, :n]).astype(jnp.bfloat16).astype(jnp.float32)
+    frac = float(jnp.mean((K[:, :n].astype(jnp.float32) == ref).astype(jnp.float32)))
+    assert frac > 0.98, frac
+
+
 def test_compressed_attention_close_to_raw():
     rng = np.random.default_rng(1)
     n = 24

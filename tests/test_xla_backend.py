@@ -36,13 +36,21 @@ PARITY_CFGS = [
     # v1-compat single width, full-page bucket (the KV/GRAD shape)
     FRConfig(word_bits=16, page_words=128, num_bases=4, delta_bits=8,
              outlier_cap=8),
+    # adaptive bucket-cap profiles, incl. a forced-spill profile (8, 8)
+    FRConfig(word_bits=16, page_words=256, num_bases=6, width_set=(4, 8),
+             cap_profiles=((64, 192), (192, 64), (8, 8)), outlier_cap=16),
+    FRConfig(word_bits=32, page_words=256, num_bases=5, width_set=(8, 16),
+             cap_profiles=((64, 192), (128, 32)), outlier_cap=32),
 ]
 
 
-@pytest.mark.parametrize(
-    "cfg", PARITY_CFGS,
-    ids=lambda c: f"wb{c.word_bits}_w{'-'.join(map(str, c.width_set))}_caps{'-'.join(map(str, c.bucket_caps))}",
-)
+def _cfg_id(c):
+    return (f"wb{c.word_bits}_w{'-'.join(map(str, c.width_set))}"
+            f"_caps{'-'.join(map(str, c.bucket_caps))}"
+            + (f"_p{c.num_profiles}" if c.num_profiles > 1 else ""))
+
+
+@pytest.mark.parametrize("cfg", PARITY_CFGS, ids=_cfg_id)
 def test_three_way_blob_parity(cfg):
     """xla, oracle, and interpret-mode Pallas blobs/decodes are all
     bit-identical, including under bucket spill and outlier drop."""
@@ -146,6 +154,36 @@ def test_table_prep_memoized():
     table2 = BaseTable(table.bases + 1, table.widths)
     xla.encode_pages(x, table2, cfg)
     assert xla.table_cache_info()["misses"] == 2
+    # content-keyed: an equal-content table hits regardless of identity
+    table3 = BaseTable(jnp.asarray(np.asarray(table.bases)), table.widths)
+    assert xla.prepare_table(table3, cfg) is xla.prepare_table(table, cfg)
+    assert xla.table_cache_info()["misses"] == 2
+
+
+def test_table_prep_never_serves_stale_constants_after_gc():
+    """Invariant lock: the memo used to key on id(leaf), which was safe
+    only because every keyed table was pinned alive by its cache entry —
+    one refactor away from CPython recycling a freed address and serving
+    stale device constants for different data.  Build and drop tables in a
+    tight loop — every prepare must reflect the table it was handed, and
+    distinct contents must never alias to a cache hit."""
+    import gc
+
+    cfg = FRConfig(word_bits=16, page_words=128, num_bases=4,
+                   width_set=(4, 8), bucket_caps=(32, 96), outlier_cap=8)
+    xla.table_cache_clear()
+    for i in range(12):
+        bases = np.asarray([100, 900, 5000, 20000], np.int32) + 7 * i
+        table = BaseTable(jnp.asarray(bases),
+                          jnp.asarray([4, 8, 4, 8], jnp.int32))
+        prep = xla.prepare_table(table, cfg)
+        np.testing.assert_array_equal(np.asarray(prep.bases), bases)
+        np.testing.assert_array_equal(np.asarray(prep.cls),
+                                      np.asarray([0, 1, 0, 1], np.int32))
+        del table, prep
+        gc.collect()      # free the leaves so their addresses can recycle
+    info = xla.table_cache_info()
+    assert info["misses"] == 12 and info["hits"] == 0, info
 
 
 def test_auto_backend_resolves_compiled():
