@@ -2,10 +2,8 @@
 compression ratio.  One row per workload: CR_modified vs CR_vanilla."""
 from __future__ import annotations
 
-import dataclasses
 import time
 
-import numpy as np
 
 from repro.core import gbdi
 from repro.data import workloads

@@ -26,6 +26,15 @@ from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 from repro.models.config import SHAPES
 
 
+def peak_bytes_per_s() -> float:
+    """Modelled HBM peak bandwidth (bytes/s) — the roofline memory ceiling.
+
+    Single source of truth is ``repro.launch.mesh.HBM_BW``; exposed here so
+    eval/throughput reports can quote the ceiling they normalise against.
+    """
+    return float(HBM_BW)
+
+
 def load_cells(d: str = "experiments/dryrun") -> list[dict]:
     cells = []
     for f in sorted(Path(d).glob("*.json")):

@@ -1,0 +1,49 @@
+"""Domain-specific static analysis for the GBDI-FR stack.
+
+The repo's core invariant — three backends (oracle / XLA / Pallas)
+producing bit-identical blobs against a normative ``docs/FORMAT.md`` —
+is enforced at runtime by parity tests, which fire *after* a bug ships.
+This package is the before-review gate: a small AST-level pass that
+knows the codebase's two recurring hazard families and catches them at
+lint time.
+
+Two checker layers (see ``docs/ANALYSIS.md`` for the full catalog):
+
+* **JAX/Pallas hot-path hazards** — host<->device syncs inside jitted
+  code, tracer-unsafe Python control flow, jit call sites missing
+  ``static_argnames`` for config-like parameters, unseeded legacy RNG
+  use outside tests, and closure captures of mutated module globals
+  that silently trigger recompilation.
+* **Format invariants** — magic bit-width/cap integer literals in
+  ``kernels/``/``serving/``/``distributed/`` that must reference the
+  named constants in :mod:`repro.core.format`, and a backend-parity
+  surface check asserting every encode/decode/attention op has oracle,
+  XLA and Pallas twins.
+
+Entry points: ``python -m repro.analysis <paths>`` (text and ``--json``
+reports, exit-nonzero on unbaselined findings) and :func:`run_analysis`
+for tests/tooling.  Known-good exceptions live in a reviewed
+``analysis-baseline.json`` whose entries each carry a justification.
+"""
+from __future__ import annotations
+
+from repro.analysis.base import Checker, all_checks, fast_checks, get_check
+from repro.analysis.baseline import Baseline, BaselineEntry, BaselineError
+from repro.analysis.engine import Report, run_analysis
+from repro.analysis.finding import Finding
+from repro.analysis.project import Project, SourceFile
+
+__all__ = [
+    "Baseline",
+    "BaselineEntry",
+    "BaselineError",
+    "Checker",
+    "Finding",
+    "Project",
+    "Report",
+    "SourceFile",
+    "all_checks",
+    "fast_checks",
+    "get_check",
+    "run_analysis",
+]

@@ -1,0 +1,227 @@
+"""Shared AST helpers: dotted names, jit-decorator parsing, device context.
+
+"Device context" means code that executes under a JAX trace: a function
+decorated with ``jax.jit`` (directly or via ``functools.partial``), a
+Pallas kernel body (name ending in ``_kernel`` or taking ``*_ref``
+parameters), or any function nested inside one.  The JAX checkers only
+fire inside device context — host code is free to call ``.item()`` or
+branch on values.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Iterator
+
+#: attribute reads that are static under a trace (shape metadata)
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+#: parameter names that conventionally carry static configuration
+CONFIG_PARAM_NAMES = {"cfg", "config", "spec", "backend", "mode", "interpret"}
+
+#: parameter names that conventionally carry donatable device buffers
+BUFFER_PARAM_NAMES = {"state", "cache", "buffer", "buffers", "opt_state"}
+
+#: scalar annotations that mark a parameter as trace-static
+_STATIC_ANN = re.compile(
+    r"(^|\.)(int|bool|str|float|bytes)$|(Config|Spec)\b"
+)
+
+#: pytree-container heads: static only if every element type is static
+_CONTAINER_ANN = re.compile(
+    r"(^|\.)(tuple|Tuple|list|List|Sequence|Mapping|dict|Dict|frozenset|FrozenSet|set|Set)$"
+)
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.jit``-style dotted name of a Name/Attribute chain, else ''."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_callable(node: ast.AST) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit", "pjit", "jax.pmap", "pmap")
+
+
+def _str_elements(node: ast.AST | None) -> set[str]:
+    """Constant string / tuple-or-list-of-strings decorator argument."""
+    out: set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.add(el.value)
+    return out
+
+
+def _int_elements(node: ast.AST | None) -> set[int]:
+    out: set[int] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.add(el.value)
+    return out
+
+
+@dataclasses.dataclass
+class JitSite:
+    """One place a function gets wrapped by jax.jit (decorator or call)."""
+
+    node: ast.expr                 # the decorator / call expression
+    static_argnames: set[str]
+    static_argnums: set[int]
+    has_static: bool               # any static_arg* spelled at the site
+    has_donate: bool               # donate_argnums/donate_argnames spelled
+
+
+def parse_jit_decorator(dec: ast.expr) -> JitSite | None:
+    """Recognise ``@jax.jit``, ``@jax.jit(...)`` and
+    ``@functools.partial(jax.jit, ...)`` decorators."""
+    if _is_jit_callable(dec):
+        return JitSite(dec, set(), set(), False, False)
+    if not isinstance(dec, ast.Call):
+        return None
+    fn = dec.func
+    call_kwargs = dec.keywords
+    if dotted_name(fn) in ("functools.partial", "partial"):
+        if not (dec.args and _is_jit_callable(dec.args[0])):
+            return None
+    elif not _is_jit_callable(fn):
+        return None
+    names: set[str] = set()
+    nums: set[int] = set()
+    has_static = has_donate = False
+    for kw in call_kwargs:
+        if kw.arg == "static_argnames":
+            names |= _str_elements(kw.value)
+            has_static = True
+        elif kw.arg == "static_argnums":
+            nums |= _int_elements(kw.value)
+            has_static = True
+        elif kw.arg in ("donate_argnums", "donate_argnames"):
+            has_donate = True
+    return JitSite(dec, names, nums, has_static, has_donate)
+
+
+def annotation_is_static(ann: ast.expr | None) -> bool:
+    """True when the annotation names a hashable, trace-static type.
+
+    JAX treats tuples/dicts as *pytree containers*, so ``dict[str,
+    jax.Array]`` is traced data while ``tuple[int, ...]`` is static
+    config: a container is static only if every element type is.
+    A bare ``dict``/``tuple`` (unknown contents) is assumed traced.
+    """
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return bool(_STATIC_ANN.search(ann.value))
+    if isinstance(ann, ast.Subscript):      # tuple[int, ...], dict[str, Array]
+        head = dotted_name(ann.value)
+        if head and _CONTAINER_ANN.search(head):
+            elts = ann.slice.elts if isinstance(ann.slice, ast.Tuple) else [ann.slice]
+            return all(
+                (isinstance(e, ast.Constant) and e.value is Ellipsis)
+                or annotation_is_static(e)
+                for e in elts
+            )
+        return annotation_is_static(ann.value)
+    if isinstance(ann, ast.BinOp):          # PEP 604 unions: static if any arm is
+        return annotation_is_static(ann.left) or annotation_is_static(ann.right)
+    name = dotted_name(ann)
+    return bool(name and _STATIC_ANN.search(name))
+
+
+def param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def positional_param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def static_params(fn: ast.FunctionDef | ast.AsyncFunctionDef, site: JitSite | None) -> set[str]:
+    """Parameters of ``fn`` that are static under its jit site: spelled in
+    static_argnames/nums, conventionally config-named, or annotated with a
+    static (non-array) type."""
+    out: set[str] = {"self", "cls"}
+    out |= CONFIG_PARAM_NAMES
+    if site is not None:
+        out |= site.static_argnames
+        pos = positional_param_names(fn)
+        out |= {pos[i] for i in site.static_argnums if i < len(pos)}
+    a = fn.args
+    for p in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        if annotation_is_static(p.annotation):
+            out.add(p.arg)
+    return out
+
+
+def is_kernel_fn(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    """Pallas kernel heuristic: ``*_kernel`` name or ``*_ref`` params."""
+    if fn.name.endswith("_kernel"):
+        return True
+    names = param_names(fn)
+    n_ref = sum(1 for n in names if n.endswith("_ref") or n == "refs")
+    return n_ref >= 2
+
+
+@dataclasses.dataclass
+class FnContext:
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    device: bool                   # executes under a trace
+    entry: bool                    # the jitted/kernel entry itself (not nested)
+    site: JitSite | None           # jit decorator site, if any
+
+
+def walk_functions(tree: ast.Module) -> Iterator[FnContext]:
+    """Yield every function with its device-context classification."""
+
+    def visit(node: ast.AST, in_device: bool) -> Iterator[FnContext]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                site = None
+                for dec in child.decorator_list:
+                    site = parse_jit_decorator(dec)
+                    if site is not None:
+                        break
+                entry = site is not None or is_kernel_fn(child)
+                device = in_device or entry
+                yield FnContext(node=child, device=device,
+                                entry=entry and not in_device, site=site)
+                yield from visit(child, device)
+            else:
+                yield from visit(child, in_device)
+
+    yield from visit(tree, False)
+
+
+def build_parents(root: ast.AST) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(root):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def call_name_of(node: ast.AST, parents: dict[ast.AST, ast.AST]) -> str | None:
+    """If ``node`` sits (transitively) inside a Call's arguments, the
+    dotted name of the *innermost* enclosing call, else None."""
+    cur = node
+    while cur in parents:
+        parent = parents[cur]
+        if isinstance(parent, ast.Call) and cur is not parent.func:
+            return dotted_name(parent.func)
+        cur = parent
+    return None

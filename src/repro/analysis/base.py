@@ -1,0 +1,75 @@
+"""Checker protocol and registry.
+
+A checker is a named callable over either one file (``scope='file'``)
+or the whole project (``scope='project'``).  File-scoped checkers form
+the *fast* subset — they need no cross-file state, so pre-commit can run
+them on just the changed files.  Registration happens at import time via
+:func:`register`; the registry is the single source the CLI, the docs
+catalog test, and the pre-commit hook all enumerate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Literal
+
+from repro.analysis.finding import Finding
+from repro.analysis.project import Project, SourceFile
+
+FileCheckFn = Callable[[SourceFile], Iterator[Finding]]
+ProjectCheckFn = Callable[[Project], Iterator[Finding]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Checker:
+    id: str
+    doc: str                                  # one-line catalog description
+    scope: Literal["file", "project"]
+    fn: FileCheckFn | ProjectCheckFn
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        if self.scope == "project":
+            yield from self.fn(project)  # type: ignore[arg-type]
+        else:
+            for f in project.files:
+                yield from self.fn(f)  # type: ignore[arg-type]
+
+
+_REGISTRY: dict[str, Checker] = {}
+
+
+def register(
+    id: str, doc: str, scope: Literal["file", "project"] = "file"
+) -> Callable[[FileCheckFn | ProjectCheckFn], FileCheckFn | ProjectCheckFn]:
+    """Decorator: add a checker function to the registry."""
+
+    def deco(fn: FileCheckFn | ProjectCheckFn) -> FileCheckFn | ProjectCheckFn:
+        if id in _REGISTRY:
+            raise ValueError(f"duplicate checker id {id!r}")
+        _REGISTRY[id] = Checker(id=id, doc=doc, scope=scope, fn=fn)
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    # importing the checker modules populates the registry
+    from repro.analysis import format_checkers, jax_checkers  # noqa: F401
+
+
+def all_checks() -> list[Checker]:
+    _ensure_loaded()
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def fast_checks() -> list[Checker]:
+    """The per-file subset pre-commit runs on changed files only."""
+    return [c for c in all_checks() if c.scope == "file"]
+
+
+def get_check(id: str) -> Checker:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[id]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown checker {id!r} (known: {known})") from None

@@ -1,0 +1,98 @@
+"""``python -m repro.analysis`` — the analysis gate's command line.
+
+Exit codes: 0 clean (all findings baselined), 1 unbaselined findings or
+stale baseline entries, 2 usage/parse/baseline errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Sequence
+
+from repro.analysis.base import all_checks, fast_checks, get_check
+from repro.analysis.baseline import Baseline, BaselineError
+from repro.analysis.engine import run_analysis
+from repro.analysis.project import ParseError, load_project
+
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis for the GBDI-FR stack "
+                    "(see docs/ANALYSIS.md)",
+    )
+    p.add_argument("paths", nargs="*", default=["src", "tests", "benchmarks"],
+                   help="files or directories to analyse "
+                        "(default: src tests benchmarks)")
+    p.add_argument("--root", default=None,
+                   help="repo root for relative paths/baseline identity "
+                        "(default: cwd)")
+    p.add_argument("--json", dest="json_out", metavar="FILE", default=None,
+                   help="also write the full report as JSON ('-' for stdout)")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help=f"baseline file (default: <root>/{DEFAULT_BASELINE} "
+                        "if it exists)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore any baseline file; report everything")
+    p.add_argument("--checks", default=None, metavar="ID[,ID...]",
+                   help="run only these checker ids")
+    p.add_argument("--fast", action="store_true",
+                   help="file-scoped checkers only (the pre-commit subset)")
+    p.add_argument("--list-checks", action="store_true",
+                   help="print the checker catalog and exit")
+    return p
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_checks:
+        for c in all_checks():
+            print(f"{c.id:24s} [{c.scope:7s}] {c.doc}")
+        return 0
+
+    try:
+        if args.checks:
+            checkers = [get_check(cid.strip())
+                        for cid in args.checks.split(",") if cid.strip()]
+        elif args.fast:
+            checkers = fast_checks()
+        else:
+            checkers = all_checks()
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    root = Path(args.root) if args.root else Path.cwd()
+    paths = [p if Path(p).is_absolute() else root / p for p in args.paths]
+    try:
+        project = load_project(paths, root=root)
+    except (ParseError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    baseline = None
+    if not args.no_baseline:
+        bpath = Path(args.baseline) if args.baseline else root / DEFAULT_BASELINE
+        if args.baseline or bpath.exists():
+            try:
+                baseline = Baseline.load(bpath)
+            except BaselineError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 2
+
+    report = run_analysis(project, checks=checkers, baseline=baseline)
+
+    if args.json_out:
+        payload = json.dumps(report.to_json(), indent=2) + "\n"
+        if args.json_out == "-":
+            sys.stdout.write(payload)
+        else:
+            Path(args.json_out).write_text(payload, encoding="utf-8")
+
+    print(report.render_text())
+    return 0 if report.ok and not report.stale else 1

@@ -1,0 +1,34 @@
+"""The unit of analysis output: one finding at one source location."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic emitted by a checker.
+
+    ``anchor`` is the stripped source line the finding points at.  The
+    baseline matches on ``(check, path, anchor)`` rather than the line
+    *number*, so unrelated edits above a suppressed line do not
+    invalidate its baseline entry.
+    """
+
+    check: str        # checker id, e.g. "jit-host-sync"
+    path: str         # repo-relative posix path
+    line: int         # 1-indexed
+    col: int          # 0-indexed
+    message: str
+    anchor: str       # stripped source text of the flagged line
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        """The baseline-matching identity of this finding."""
+        return (self.check, self.path, self.anchor)
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: [{self.check}] {self.message}"

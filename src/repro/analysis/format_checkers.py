@@ -1,0 +1,151 @@
+"""Format-invariant checkers.
+
+``docs/FORMAT.md`` is normative and :mod:`repro.core.format` is its
+single executable source of truth.  Backend code (``kernels/``,
+``serving/``, ``distributed/``) that re-spells a bit-width mask or a
+default cap as a bare integer will silently diverge the day the format
+revs — these checkers force every such value back to a named constant,
+and assert the three-backend surface stays complete.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis import _ast_util as U
+from repro.analysis.base import register
+from repro.analysis.finding import Finding
+from repro.analysis.project import Project, SourceFile
+
+# --------------------------------------------------------------------------
+# format-magic-literal
+# --------------------------------------------------------------------------
+
+#: directories where format values must be spelled via repro.core.format
+_FORMAT_SCOPED = ("src/repro/kernels/", "src/repro/serving/", "src/repro/distributed/")
+
+#: bare integers that are really format constants
+_MASK_LITERALS = {
+    0xFFFF: "repro.core.format.WORD16_MASK (or word_mask(bits))",
+    1 << 15: "repro.core.format.WORD16_HALF (or half_span(bits))",
+}
+
+#: FRConfig constructor kwargs whose defaults have named constants
+_FRCONFIG_KW = {
+    "page_words": ("DEFAULT_PAGE_WORDS", 2048),
+    "num_bases": ("DEFAULT_NUM_BASES", 14),
+    "outlier_cap": ("DEFAULT_OUTLIER_CAP", 64),
+}
+
+
+def _in_format_scope(src: SourceFile) -> bool:
+    return src.rel.startswith(_FORMAT_SCOPED)
+
+
+@register(
+    "format-magic-literal",
+    "bit-width/cap integer literal in kernels|serving|distributed that must "
+    "reference a named constant in repro.core.format",
+)
+def check_format_magic_literal(src: SourceFile) -> Iterator[Finding]:
+    if not _in_format_scope(src):
+        return
+    for node in ast.walk(src.tree):
+        # masks / bias spans spelled inline: `val & 0xFFFF`, `+ (1 << 15)`
+        if isinstance(node, ast.Constant) and node.value in _MASK_LITERALS:
+            yield Finding(
+                "format-magic-literal", src.rel, node.lineno, node.col_offset,
+                f"magic literal {node.value:#x} re-spells a format constant; "
+                f"use {_MASK_LITERALS[node.value]}",
+                src.anchor(node.lineno))
+        elif (isinstance(node, ast.BinOp) and isinstance(node.op, ast.LShift)
+              and isinstance(node.left, ast.Constant) and node.left.value == 1
+              and isinstance(node.right, ast.Constant)
+              and node.right.value in (7, 15, 31)):
+            yield Finding(
+                "format-magic-literal", src.rel, node.lineno, node.col_offset,
+                f"magic span (1 << {node.right.value}) re-spells a format "
+                "bias; use repro.core.format.half_span(bits)",
+                src.anchor(node.lineno))
+        # FRConfig(...) constructed with bare default literals
+        elif (isinstance(node, ast.Call)
+              and U.dotted_name(node.func).rsplit(".", 1)[-1] == "FRConfig"):
+            for kw in node.keywords:
+                spec = _FRCONFIG_KW.get(kw.arg or "")
+                if (spec is not None and isinstance(kw.value, ast.Constant)
+                        and kw.value.value == spec[1]):
+                    yield Finding(
+                        "format-magic-literal", src.rel,
+                        kw.value.lineno, kw.value.col_offset,
+                        f"FRConfig({kw.arg}={spec[1]}) re-spells the format "
+                        f"default; use repro.core.format.{spec[0]}",
+                        src.anchor(kw.value.lineno))
+
+
+# --------------------------------------------------------------------------
+# backend-parity
+# --------------------------------------------------------------------------
+
+_ORACLE_MOD = "src/repro/kernels/ref.py"
+_XLA_MOD = "src/repro/kernels/xla.py"
+_PALLAS_PREFIX = "src/repro/kernels/gbdi_"
+
+_BACKENDS = ("oracle", "xla", "pallas")
+
+
+def _op_stem(name: str) -> str | None:
+    """Canonical op name for a public backend function, or None."""
+    low = name.lower()
+    if "attention" in low or "attn" in low:
+        return "paged_attention"
+    if "probe" in low:
+        return "probe"
+    if "encode" in low:
+        return "encode"
+    if "decode" in low:
+        return "decode"
+    return None
+
+
+def _public_defs(src: SourceFile) -> Iterator[ast.FunctionDef]:
+    for node in src.tree.body:
+        if isinstance(node, ast.FunctionDef) and not node.name.startswith("_"):
+            yield node
+
+
+@register(
+    "backend-parity",
+    "every public encode/decode/probe/attention op must have oracle, XLA and "
+    "Pallas implementations (kernels/ref.py, kernels/xla.py, kernels/gbdi_*.py)",
+    scope="project",
+)
+def check_backend_parity(project: Project) -> Iterator[Finding]:
+    # op stem -> backend -> list of (SourceFile, FunctionDef)
+    surface: dict[str, dict[str, list[tuple[SourceFile, ast.FunctionDef]]]] = {}
+    for src in project.files:
+        if src.rel == _ORACLE_MOD:
+            backend = "oracle"
+        elif src.rel == _XLA_MOD:
+            backend = "xla"
+        elif src.rel.startswith(_PALLAS_PREFIX):
+            backend = "pallas"
+        else:
+            continue
+        for fn in _public_defs(src):
+            stem = _op_stem(fn.name)
+            if stem is not None:
+                surface.setdefault(stem, {}).setdefault(backend, []).append((src, fn))
+    for stem in sorted(surface):
+        impls = surface[stem]
+        missing = [b for b in _BACKENDS if b not in impls]
+        if not missing:
+            continue
+        # anchor the finding at the first existing implementation
+        src, fn = next(iter(impls.values()))[0]
+        have = ", ".join(sorted(impls))
+        yield Finding(
+            "backend-parity", src.rel, fn.lineno, fn.col_offset,
+            f"op `{stem}` is implemented for {have} but missing "
+            f"{', '.join(missing)} twin(s); the three-backend bit-parity "
+            "contract (docs/FORMAT.md) requires all of oracle/xla/pallas",
+            src.anchor(fn.lineno))

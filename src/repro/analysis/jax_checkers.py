@@ -1,0 +1,356 @@
+"""JAX/Pallas hot-path hazard checkers.
+
+These encode the failure modes that have actually bitten this codebase's
+kind of code: a stray ``.item()`` inside a jitted encoder serialises the
+whole batch pipeline; a Python ``if`` on a traced value raises
+``TracerBoolConversionError`` only on the first non-cached call; a jit
+call site without ``static_argnames`` on its config argument retraces
+per call; an unseeded RNG makes parity failures unreproducible.
+
+All context sensitivity comes from :mod:`repro.analysis._ast_util`'s
+device-context walk — host-side code is exempt from the trace rules.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis import _ast_util as U
+from repro.analysis.base import register
+from repro.analysis.finding import Finding
+from repro.analysis.project import SourceFile
+
+# --------------------------------------------------------------------------
+# jit-host-sync: host<->device synchronisation inside traced code
+# --------------------------------------------------------------------------
+
+#: method calls that force a device->host sync (or fail) on a tracer
+_SYNC_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+#: numpy entry points that materialise a concrete array from a tracer
+_NUMPY_MATERIALISERS = {"asarray", "array", "copy", "ascontiguousarray"}
+_NUMPY_MODULES = {"np", "numpy", "onp"}
+#: builtins that concretise a traced scalar
+_SCALAR_BUILTINS = {"float", "int", "bool"}
+
+
+def _is_constant_like(node: ast.expr) -> bool:
+    """Literal-ish argument — ``float("inf")``, ``int(0x10)`` are host math."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp):
+        return _is_constant_like(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _is_constant_like(node.left) and _is_constant_like(node.right)
+    return False
+
+
+@register(
+    "jit-host-sync",
+    "host<->device sync (.item()/np.asarray/float()) inside jitted or kernel code",
+)
+def check_host_sync(src: SourceFile) -> Iterator[Finding]:
+    if src.is_test:
+        return
+    for ctx in U.walk_functions(src.tree):
+        if not ctx.device:
+            continue
+        for node in ast.walk(ctx.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not ctx.node:
+                continue  # nested fns yielded separately by walk_functions
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            msg = None
+            if isinstance(fn, ast.Attribute) and fn.attr in _SYNC_METHODS:
+                msg = (f".{fn.attr}() forces a device->host sync under jit; "
+                       "keep the value on device or compute it outside the traced fn")
+            elif (isinstance(fn, ast.Attribute)
+                  and isinstance(fn.value, ast.Name)
+                  and fn.value.id in _NUMPY_MODULES
+                  and fn.attr in _NUMPY_MATERIALISERS):
+                msg = (f"{fn.value.id}.{fn.attr}() on a traced value materialises it on "
+                       "host; use jnp equivalents inside jitted code")
+            elif (isinstance(fn, ast.Name) and fn.id in _SCALAR_BUILTINS
+                  and node.args and not all(_is_constant_like(a) for a in node.args)):
+                msg = (f"{fn.id}() concretises a traced scalar (sync or TracerError); "
+                       "use jnp casts/astype inside jitted code")
+            elif U.dotted_name(fn) == "jax.device_get":
+                msg = "jax.device_get inside traced code forces a host round-trip"
+            if msg is not None:
+                yield Finding("jit-host-sync", src.rel, node.lineno, node.col_offset,
+                              msg, src.anchor(node.lineno))
+
+
+# --------------------------------------------------------------------------
+# traced-branch: Python control flow on traced array values
+# --------------------------------------------------------------------------
+
+
+def _names_in(node: ast.AST) -> Iterator[ast.Name]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n
+
+
+def _name_use_is_safe(name: ast.Name, parents: dict[ast.AST, ast.AST]) -> bool:
+    """True when this use of a (possibly traced) name cannot leak a traced
+    truth value: shape/dtype metadata, ``len``/``isinstance``, ``is None``."""
+    parent = parents.get(name)
+    if isinstance(parent, ast.Attribute) and parent.attr in U.STATIC_ATTRS:
+        return True
+    if (isinstance(parent, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in parent.ops)):
+        return True
+    call = U.call_name_of(name, parents)
+    if call in ("len", "isinstance", "type"):
+        return True
+    return False
+
+
+@register(
+    "traced-branch",
+    "Python if/while on a traced array value inside jitted code (use lax.cond/where)",
+)
+def check_traced_branch(src: SourceFile) -> Iterator[Finding]:
+    if src.is_test:
+        return
+    for ctx in U.walk_functions(src.tree):
+        if not ctx.device:
+            continue
+        static = U.static_params(ctx.node, ctx.site)
+        # Kernel refs are read through pl.load / [...] into locals, and the
+        # params themselves (grid metadata aside) are Refs, not tracers you
+        # would branch on; only *array-valued* params are suspect.
+        dynamic = {
+            p for p in U.param_names(ctx.node)
+            if p not in static and not p.endswith("_ref") and p != "refs"
+        }
+        if not dynamic:
+            continue
+        parents = U.build_parents(ctx.node)
+        for node in ast.walk(ctx.node):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            owner = node
+            while owner in parents and not isinstance(
+                    parents[owner], (ast.FunctionDef, ast.AsyncFunctionDef)):
+                owner = parents[owner]
+            if parents.get(owner) is not ctx.node:
+                continue  # the If belongs to a nested fn; that ctx handles it
+            hits = [
+                n for n in _names_in(node.test)
+                if n.id in dynamic and not _name_use_is_safe(n, parents)
+            ]
+            if hits:
+                kw = "while" if isinstance(node, ast.While) else "if"
+                names = ", ".join(sorted({n.id for n in hits}))
+                yield Finding(
+                    "traced-branch", src.rel, node.lineno, node.col_offset,
+                    f"Python `{kw}` on possibly-traced value(s) {names} inside "
+                    "jitted code raises at trace time; use jax.lax.cond/select "
+                    "or mark the argument static",
+                    src.anchor(node.lineno))
+
+
+# --------------------------------------------------------------------------
+# jit-static-args: jit sites missing static_argnames / donate_argnums
+# --------------------------------------------------------------------------
+
+
+def _config_like_params(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    out = []
+    a = fn.args
+    for p in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        if p.arg in ("self", "cls"):
+            continue
+        if p.arg in U.CONFIG_PARAM_NAMES or U.annotation_is_static(p.annotation):
+            out.append(p.arg)
+    return out
+
+
+@register(
+    "jit-static-args",
+    "jax.jit/shard_map call site missing static_argnames (config args) or "
+    "donate_argnums (buffer args)",
+)
+def check_jit_static_args(src: SourceFile) -> Iterator[Finding]:
+    if src.is_test:
+        return
+    # decorator form
+    for ctx in U.walk_functions(src.tree):
+        if ctx.site is None:
+            continue
+        fn, site = ctx.node, ctx.site
+        covered = set(site.static_argnames)
+        pos = U.positional_param_names(fn)
+        covered |= {pos[i] for i in site.static_argnums if i < len(pos)}
+        missing = [p for p in _config_like_params(fn) if p not in covered]
+        if missing:
+            yield Finding(
+                "jit-static-args", src.rel, fn.lineno, fn.col_offset,
+                f"jitted `{fn.name}` takes config-like arg(s) "
+                f"{', '.join(missing)} not listed in static_argnames; "
+                "passing them traced retraces or fails on hashing",
+                src.anchor(fn.lineno))
+        donatable = [p for p in U.param_names(fn) if p in U.BUFFER_PARAM_NAMES]
+        if donatable and not site.has_donate:
+            yield Finding(
+                "jit-static-args", src.rel, fn.lineno, fn.col_offset,
+                f"jitted `{fn.name}` takes buffer-like arg(s) "
+                f"{', '.join(donatable)} without donate_argnums; the old "
+                "buffer stays live and doubles peak HBM",
+                src.anchor(fn.lineno))
+    # call form: jax.jit(f) where f is a module-level def we can resolve
+    defs = {
+        n.name: n for n in ast.walk(src.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if U.dotted_name(node.func) not in ("jax.jit", "jit"):
+            continue
+        if not node.args or not isinstance(node.args[0], ast.Name):
+            continue
+        target = defs.get(node.args[0].id)
+        if target is None:
+            continue
+        site = U.parse_jit_decorator(node)
+        assert site is not None
+        covered = set(site.static_argnames)
+        pos = U.positional_param_names(target)
+        covered |= {pos[i] for i in site.static_argnums if i < len(pos)}
+        missing = [p for p in _config_like_params(target) if p not in covered]
+        if missing:
+            yield Finding(
+                "jit-static-args", src.rel, node.lineno, node.col_offset,
+                f"jax.jit({target.name}) misses static_argnames for "
+                f"config-like arg(s) {', '.join(missing)}",
+                src.anchor(node.lineno))
+
+
+# --------------------------------------------------------------------------
+# unseeded-random: non-reproducible RNG outside tests
+# --------------------------------------------------------------------------
+
+_NP_LEGACY = {
+    "seed", "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "beta", "binomial", "poisson", "exponential",
+}
+_STDLIB_RANDOM = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "getrandbits", "seed",
+}
+
+
+@register(
+    "unseeded-random",
+    "legacy/unseeded RNG (np.random.*, random.*) outside tests breaks reproducibility",
+)
+def check_unseeded_random(src: SourceFile) -> Iterator[Finding]:
+    if src.is_test:
+        return
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = U.dotted_name(node.func)
+        msg = None
+        if name.startswith("np.random.") or name.startswith("numpy.random."):
+            attr = name.rsplit(".", 1)[1]
+            if attr in _NP_LEGACY:
+                msg = (f"{name}() uses the legacy global NumPy RNG; pass an "
+                       "explicit np.random.default_rng(seed) Generator")
+            elif attr == "default_rng" and not node.args and not node.keywords:
+                msg = ("np.random.default_rng() without a seed is "
+                       "non-reproducible; thread a seed through")
+        elif name.startswith("random.") and name.split(".", 1)[1] in _STDLIB_RANDOM:
+            msg = (f"{name}() draws from the unseeded process-global RNG; "
+                   "use random.Random(seed) or numpy's seeded Generator")
+        if msg is not None:
+            yield Finding("unseeded-random", src.rel, node.lineno,
+                          node.col_offset, msg, src.anchor(node.lineno))
+
+
+# --------------------------------------------------------------------------
+# jit-closure-capture: traced fns closing over mutated module state
+# --------------------------------------------------------------------------
+
+
+def _module_mutable_globals(tree: ast.Module) -> dict[str, set[str]]:
+    """Names of module-level dict/list/set displays, split into
+    ``{'all': names, 'mutated': names mutated somewhere in the module}``."""
+    containers: set[str] = set()
+    for node in tree.body:
+        targets: list[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        else:
+            continue
+        if isinstance(value, (ast.Dict, ast.List, ast.Set, ast.DictComp,
+                              ast.ListComp, ast.SetComp)):
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    containers.add(t.id)
+    mutated: set[str] = set()
+    _MUTATORS = {"update", "append", "extend", "add", "pop", "popitem",
+                 "clear", "setdefault", "insert", "remove", "discard"}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id in containers):
+                    mutated.add(t.value.id)
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            if (isinstance(fn, ast.Attribute) and fn.attr in _MUTATORS
+                    and isinstance(fn.value, ast.Name)
+                    and fn.value.id in containers):
+                mutated.add(fn.value.id)
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id in containers):
+                    mutated.add(t.value.id)
+    return {"all": containers, "mutated": mutated}
+
+
+@register(
+    "jit-closure-capture",
+    "jitted code closing over a mutated module-level container, or jax.jit "
+    "applied to a bare lambda (silent recompiles / stale captures)",
+)
+def check_closure_capture(src: SourceFile) -> Iterator[Finding]:
+    if src.is_test:
+        return
+    info = _module_mutable_globals(src.tree)
+    mutated = info["mutated"]
+    for ctx in U.walk_functions(src.tree):
+        if not ctx.device or not mutated:
+            continue
+        local_names = set(U.param_names(ctx.node))
+        for node in ast.walk(ctx.node):
+            if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                    and node.id in mutated and node.id not in local_names):
+                yield Finding(
+                    "jit-closure-capture", src.rel, node.lineno, node.col_offset,
+                    f"jitted `{ctx.node.name}` reads module-level container "
+                    f"`{node.id}` that is mutated elsewhere in this module; "
+                    "jit captures it by value at trace time (stale data or "
+                    "silent retrace) — pass it as an argument",
+                    src.anchor(node.lineno))
+                break  # one finding per function per container set is enough
+    for node in ast.walk(src.tree):
+        if (isinstance(node, ast.Call)
+                and U.dotted_name(node.func) in ("jax.jit", "jit")
+                and node.args and isinstance(node.args[0], ast.Lambda)):
+            yield Finding(
+                "jit-closure-capture", src.rel, node.lineno, node.col_offset,
+                "jax.jit on a bare lambda: every evaluation builds a new "
+                "function object, defeating the jit cache; def a named fn once",
+                src.anchor(node.lineno))

@@ -16,3 +16,26 @@ from repro.core.format import BaseTable, as_base_table  # noqa: F401
 from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode  # noqa: F401
 from repro.core import bdi  # noqa: F401
 from repro.core.kmeans import fit_bases, fit_bases_host  # noqa: F401
+
+__all__ = [
+    "BaseTable",
+    "FRConfig",
+    "GBDIConfig",
+    "GBDIModel",
+    "as_base_table",
+    "assign",
+    "bdi",
+    "block_sizes_bits",
+    "compressed_size_bits",
+    "compression_ratio",
+    "decode",
+    "encode",
+    "fit",
+    "fit_bases",
+    "fit_bases_host",
+    "fit_fr_bases",
+    "fr_decode",
+    "fr_encode",
+    "roundtrip_ok",
+    "to_words",
+]

@@ -12,8 +12,10 @@ what the paper's tables compare; a bit-stream packer adds nothing to CR).
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import numpy as np
+import numpy.typing as npt
 
 _TAG_BITS = 4
 # (base_bytes, delta_bytes) pairs from the B∆I paper
@@ -25,7 +27,7 @@ class BDIConfig:
     block_bytes: int = 64
 
 
-def _view_words(block_bytes: np.ndarray, size: int) -> np.ndarray:
+def _view_words(block_bytes: npt.NDArray[Any], size: int) -> npt.NDArray[np.uint64]:
     """(n_blocks, block_bytes) uint8 -> (n_blocks, block_bytes/size) uint64."""
     n = block_bytes.shape[0]
     dt = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}[size]
@@ -38,7 +40,9 @@ def _view_words(block_bytes: np.ndarray, size: int) -> np.ndarray:
     )
 
 
-def compress(data, config: BDIConfig = BDIConfig()) -> dict:
+def compress(
+    data: npt.NDArray[Any] | bytes, config: BDIConfig = BDIConfig()
+) -> dict[str, Any]:
     """Returns per-block chosen pattern, sizes (bits) and the IR for decode."""
     from repro.core.gbdi import to_words  # byte handling reuse
 
@@ -91,7 +95,7 @@ def compress(data, config: BDIConfig = BDIConfig()) -> dict:
     }
 
 
-def decompress(blob: dict) -> np.ndarray:
+def decompress(blob: dict[str, Any]) -> npt.NDArray[Any]:
     """Reconstruct from the IR by re-deriving each block's encoding."""
     blocks, tags = blob["blocks"], blob["tags"]
     out = np.zeros_like(blocks)
@@ -117,9 +121,9 @@ def decompress(blob: dict) -> np.ndarray:
     return out.reshape(-1)
 
 
-def compressed_size_bits(blob: dict) -> int:
+def compressed_size_bits(blob: dict[str, Any]) -> int:
     return int(blob["sizes_bits"].sum())
 
 
-def compression_ratio(blob: dict) -> float:
+def compression_ratio(blob: dict[str, Any]) -> float:
     return blob["n_bytes"] * 8 / max(1, compressed_size_bits(blob))

@@ -10,14 +10,19 @@ use the lane-aligned fixed-rate format in :mod:`repro.core.gbdi_fr`.
 """
 from __future__ import annotations
 
+from typing import Any
+
 import numpy as np
+import numpy.typing as npt
 
 # Process this many fields per chunk so the (chunk, max_width) scratch
 # matrices stay small even for multi-GB dumps.
 _CHUNK = 1 << 16
 
 
-def pack_bits(values: np.ndarray, widths: np.ndarray) -> tuple[np.ndarray, int]:
+def pack_bits(
+    values: npt.NDArray[Any], widths: npt.NDArray[Any]
+) -> tuple[npt.NDArray[np.uint8], int]:
     """Pack ``values[i]`` into ``widths[i]`` bits each (LSB-first).
 
     Returns ``(bytestream, total_bits)``.  Bits of ``values[i]`` above
@@ -46,7 +51,9 @@ def pack_bits(values: np.ndarray, widths: np.ndarray) -> tuple[np.ndarray, int]:
     return np.packbits(out[:total_bits], bitorder="little"), total_bits
 
 
-def unpack_bits(data: np.ndarray, widths: np.ndarray) -> np.ndarray:
+def unpack_bits(
+    data: npt.NDArray[Any], widths: npt.NDArray[Any]
+) -> npt.NDArray[np.uint64]:
     """Inverse of :func:`pack_bits`: returns uint64 values, one per width."""
     widths = np.ascontiguousarray(widths, dtype=np.int64)
     total_bits = int(widths.sum())

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import NamedTuple, Sequence
+from typing import Any, NamedTuple, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,30 @@ LANE_WIDTHS = (1, 2, 4, 8, 16)
 #: width of the per-page profile id stored when a config ships more than
 #: one bucket-cap profile (one byte in the serialized page header)
 PROFILE_ID_BITS = 8
+
+#: format defaults shared by the serving/distributed FRConfig presets
+#: (KV cache rows and gradient pages both use the paper's page geometry)
+DEFAULT_PAGE_WORDS = 2048
+DEFAULT_NUM_BASES = 14
+DEFAULT_OUTLIER_CAP = 64
+
+
+def word_mask(bits: int) -> int:
+    """All-ones mask of a ``bits``-wide memory word, e.g. 0xFFFF for 16."""
+    return (1 << bits) - 1
+
+
+def half_span(bits: int) -> int:
+    """Sign bias of a ``bits``-wide word: ``1 << (bits - 1)``.
+
+    Wrapped-delta decode recentres via ``((d + half) & mask) - half``.
+    """
+    return 1 << (bits - 1)
+
+
+#: the bf16/int16 memory-word constants backends spell most often
+WORD16_MASK = word_mask(16)
+WORD16_HALF = half_span(16)
 
 
 # ---------------------------------------------------------------------------
@@ -84,10 +108,15 @@ class BaseTable(NamedTuple):
 
     @property
     def num_bases(self) -> int:
-        return self.bases.shape[0]
+        return int(self.bases.shape[0])
 
 
-def as_base_table(table, *, default_width: int) -> BaseTable:
+#: anything the v1/v2 APIs accept where a base table is expected: a real
+#: :class:`BaseTable`, a bare bases array, or a (bases, widths) pair
+TableLike = Union["BaseTable", jax.Array, Sequence[Any]]
+
+
+def as_base_table(table: TableLike, *, default_width: int) -> BaseTable:
     """Coerce a bare bases array to a :class:`BaseTable` (v1 compat).
 
     A plain array gets every base paired with ``default_width`` — callers
@@ -174,7 +203,9 @@ def class_demand(code: jax.Array, cls: jax.Array, num_classes: int) -> jax.Array
     ])
 
 
-def delta_fit(values: jax.Array, table: BaseTable, *, word_bits: int):
+def delta_fit(
+    values: jax.Array, table: BaseTable, *, word_bits: int
+) -> tuple[jax.Array, jax.Array]:
     """(n, k) wrapping deltas and the per-base fit mask ``|d| < 2**(w-1)``."""
     d = wrapped_delta(values, table.bases, word_bits)
     m = delta_magnitude(d)
@@ -214,17 +245,25 @@ def assign(
 
 
 __all__ = [
+    "DEFAULT_NUM_BASES",
+    "DEFAULT_OUTLIER_CAP",
+    "DEFAULT_PAGE_WORDS",
     "LANE_BITS",
     "LANE_WIDTHS",
     "PROFILE_ID_BITS",
+    "WORD16_HALF",
+    "WORD16_MASK",
     "BaseTable",
+    "TableLike",
     "as_base_table",
     "assign",
     "class_demand",
     "class_indices",
     "delta_fit",
+    "half_span",
     "outlier_code",
     "ptr_bits",
     "validate_cap_profiles",
+    "word_mask",
     "zero_code",
 ]

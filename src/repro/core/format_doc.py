@@ -13,7 +13,10 @@ materialise until the spec did.
 """
 from __future__ import annotations
 
+from typing import Any, Callable
+
 import numpy as np
+import numpy.typing as npt
 
 from repro.core.format import BaseTable
 from repro.core.gbdi_fr import FRConfig, fr_encode
@@ -40,7 +43,7 @@ def example_table() -> BaseTable:
                      jnp.asarray([4, 8], jnp.int32))
 
 
-def example_page() -> np.ndarray:
+def example_page() -> npt.NDArray[np.int32]:
     """128 int32 word patterns; only the first 64 are live (a '64-word'
     worked page inside the smallest legal 128-word frame).
 
@@ -58,14 +61,14 @@ def example_page() -> np.ndarray:
     return x
 
 
-def encode_example():
+def encode_example() -> tuple[FRConfig, dict[str, npt.NDArray[Any]]]:
     cfg = example_config()
     blob = fr_encode(example_page()[None, :].astype(np.int32),
                      example_table(), cfg)
     return cfg, {k: np.asarray(v)[0] for k, v in blob.items()}
 
 
-def serialize_page(blob: dict, cfg: FRConfig) -> bytes:
+def serialize_page(blob: dict[str, Any], cfg: FRConfig) -> bytes:
     """Normative byte layout of one encoded page:
 
     ``profile`` as one uint8 (only when the config ships >1 cap profile)
@@ -92,7 +95,7 @@ def serialize_page(blob: dict, cfg: FRConfig) -> bytes:
     return out
 
 
-def _rows(arr, per, fmt):
+def _rows(arr: Any, per: int, fmt: Callable[[Any], str]) -> list[str]:
     arr = np.asarray(arr).reshape(-1)
     return [
         f"  [{i:>3}..{min(i + per, arr.size) - 1:>3}] "
@@ -153,7 +156,7 @@ def worked_example() -> str:
     return "\n".join(lines)
 
 
-def _unpacked_codes(blob, cfg):
+def _unpacked_codes(blob: dict[str, Any], cfg: FRConfig) -> npt.NDArray[Any]:
     from repro.core.gbdi_fr import unpack_lanes
     import jax.numpy as jnp
 

@@ -31,6 +31,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+import numpy.typing as npt
 
 from repro.core import bitpack
 from repro.core import format as fmt
@@ -54,7 +55,7 @@ class GBDIConfig:
     modified_kmeans: bool = True  # paper: modified beats vanilla
     seed: int = 0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.word_bits not in (16, 32):
             raise ValueError("word_bits must be 16 or 32")
         if any(w >= self.word_bits for w in self.width_set):
@@ -82,8 +83,8 @@ class GBDIConfig:
 class GBDIModel:
     """Fitted global state: the base table and paired widths."""
     config: GBDIConfig
-    bases: np.ndarray   # (k,) int32 (signed view of the word bit pattern)
-    widths: np.ndarray  # (k,) int32, each from config.width_set
+    bases: npt.NDArray[np.int32]   # (k,) signed view of the word bit pattern
+    widths: npt.NDArray[np.int32]  # (k,) each from config.width_set
 
     @property
     def table(self) -> BaseTable:
@@ -114,7 +115,7 @@ def block_sizes_bits(
 # dtype <-> word-stream helpers
 # ---------------------------------------------------------------------------
 
-def to_words(arr: np.ndarray | bytes, word_bits: int = 32) -> np.ndarray:
+def to_words(arr: npt.NDArray[Any] | bytes, word_bits: int = 32) -> npt.NDArray[Any]:
     """View any buffer/array as a stream of unsigned words (zero-padded).
 
     Mirrors the paper's treatment of a memory dump as raw 32-bit words; ML
@@ -133,14 +134,14 @@ def to_words(arr: np.ndarray | bytes, word_bits: int = 32) -> np.ndarray:
     return buf.view(np.uint16 if word_bits == 16 else np.uint32)
 
 
-def words_to_signed(words: np.ndarray, word_bits: int) -> np.ndarray:
+def words_to_signed(words: npt.NDArray[Any], word_bits: int) -> npt.NDArray[Any]:
     """Unsigned word patterns -> int32 signed view used by the jnp core."""
     if word_bits == 32:
         return words.astype(np.uint32).view(np.int32)
     return words.astype(np.int32)  # 16-bit words zero-extended
 
 
-def signed_to_words(signed: np.ndarray, word_bits: int) -> np.ndarray:
+def signed_to_words(signed: npt.NDArray[Any], word_bits: int) -> npt.NDArray[Any]:
     if word_bits == 32:
         return signed.astype(np.int32).view(np.uint32)
     return (signed.astype(np.int64) & 0xFFFF).astype(np.uint16)
@@ -150,7 +151,7 @@ def signed_to_words(signed: np.ndarray, word_bits: int) -> np.ndarray:
 # fit / encode / decode (host, paper-faithful, bit-granular, lossless)
 # ---------------------------------------------------------------------------
 
-def fit(data: np.ndarray | bytes, config: GBDIConfig = GBDIConfig()) -> GBDIModel:
+def fit(data: npt.NDArray[Any] | bytes, config: GBDIConfig = GBDIConfig()) -> GBDIModel:
     """Offline "background data analysis": fit the global base table."""
     words = to_words(data, config.word_bits)
     bases, widths = fit_bases_host(
@@ -166,7 +167,7 @@ def fit(data: np.ndarray | bytes, config: GBDIConfig = GBDIConfig()) -> GBDIMode
     return GBDIModel(config=config, bases=bases, widths=widths)
 
 
-def encode(data: np.ndarray | bytes, model: GBDIModel) -> dict[str, Any]:
+def encode(data: npt.NDArray[Any] | bytes, model: GBDIModel) -> dict[str, Any]:
     """Compress to the bit-granular GBDI format.  Lossless."""
     cfg = model.config
     words = to_words(data, cfg.word_bits)
@@ -200,7 +201,7 @@ def encode(data: np.ndarray | bytes, model: GBDIModel) -> dict[str, Any]:
     }
 
 
-def decode(blob: dict[str, Any]) -> np.ndarray:
+def decode(blob: dict[str, Any]) -> npt.NDArray[Any]:
     """Reconstruct the exact original word stream."""
     cfg: GBDIConfig = blob["config"]
     n = blob["n_words"]
@@ -236,7 +237,7 @@ def compression_ratio(blob: dict[str, Any]) -> float:
     return blob["n_words"] * cfg.word_bits / max(1, compressed_size_bits(blob))
 
 
-def roundtrip_ok(data: np.ndarray | bytes, model: GBDIModel) -> bool:
+def roundtrip_ok(data: npt.NDArray[Any] | bytes, model: GBDIModel) -> bool:
     words = to_words(data, model.config.word_bits)
     return bool(np.array_equal(decode(encode(data, model)), words))
 

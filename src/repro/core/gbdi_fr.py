@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -107,7 +108,7 @@ class FRConfig:
     # full-page bucket (width_set=(w,), bucket_caps=(page_words,)).
     delta_bits: dataclasses.InitVar[int | None] = None
 
-    def __post_init__(self, delta_bits: int | None):
+    def __post_init__(self, delta_bits: int | None) -> None:
         if delta_bits is not None:
             object.__setattr__(self, "width_set", (int(delta_bits),))
             object.__setattr__(self, "bucket_caps", (self.page_words,))
@@ -191,7 +192,7 @@ class FRConfig:
         the lexicographic ``(n_dropped, serialized_bits, profile_id)``."""
         return 8 * self.compressed_bytes_per_page() + 1
 
-    def profile_cost_bits(self, profile: int, n_dropped) -> "jax.Array":
+    def profile_cost_bits(self, profile: int, n_dropped: jax.Array) -> jax.Array:
         """The probe's effective encoded size of a page under ``profile``.
 
         Exactness first, then size: ``n_dropped * drop_penalty_bits +
@@ -410,7 +411,7 @@ def _decode_page(blob: dict[str, jax.Array], table: BaseTable, cfg: FRConfig) ->
 
     val = table.bases[base_code] + delta
     if wb == 16:
-        val = val & 0xFFFF
+        val = val & fmt.WORD16_MASK
     val = jnp.where(code == cfg.zero_code, 0, val)
     # outlier scatter-back (only slots < n_out are live)
     live = jnp.arange(cfg.outlier_cap) < blob["n_out"]
@@ -421,23 +422,23 @@ def _decode_page(blob: dict[str, jax.Array], table: BaseTable, cfg: FRConfig) ->
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def fr_encode(x: jax.Array, table, cfg: FRConfig) -> dict[str, jax.Array]:
+def fr_encode(x: jax.Array, table: fmt.TableLike, cfg: FRConfig) -> dict[str, jax.Array]:
     """Encode (n_pages, page_words) int32 word pages. Pure jnp oracle."""
-    table = as_base_table(table, default_width=cfg.widest_bits)
-    return jax.vmap(lambda p: _encode_page(p, table, cfg))(x)
+    bt = as_base_table(table, default_width=cfg.widest_bits)
+    return jax.vmap(lambda p: _encode_page(p, bt, cfg))(x)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def fr_decode(blob: dict[str, jax.Array], table, cfg: FRConfig) -> jax.Array:
-    table = as_base_table(table, default_width=cfg.widest_bits)
-    return jax.vmap(lambda b: _decode_page(b, table, cfg))(blob)
+def fr_decode(blob: dict[str, jax.Array], table: fmt.TableLike, cfg: FRConfig) -> jax.Array:
+    bt = as_base_table(table, default_width=cfg.widest_bits)
+    return jax.vmap(lambda b: _decode_page(b, bt, cfg))(blob)
 
 
 # ---------------------------------------------------------------------------
 # tensor-level wrappers (floats by bit pattern, like the paper's memory words)
 # ---------------------------------------------------------------------------
 
-def tensor_to_pages(x: jax.Array, cfg: FRConfig) -> tuple[jax.Array, dict]:
+def tensor_to_pages(x: jax.Array, cfg: FRConfig) -> tuple[jax.Array, dict[str, Any]]:
     """Bitcast any tensor to (n_pages, page_words) int32 word pages."""
     flat = x.reshape(-1)
     if x.dtype == jnp.float32:
@@ -457,7 +458,7 @@ def tensor_to_pages(x: jax.Array, cfg: FRConfig) -> tuple[jax.Array, dict]:
     return words.reshape(-1, cfg.page_words), meta
 
 
-def pages_to_tensor(words: jax.Array, meta: dict, cfg: FRConfig) -> jax.Array:
+def pages_to_tensor(words: jax.Array, meta: dict[str, Any], cfg: FRConfig) -> jax.Array:
     flat = words.reshape(-1)[: meta["n"]]
     if meta["dtype"] == jnp.float32:
         out = jax.lax.bitcast_convert_type(flat, jnp.float32)

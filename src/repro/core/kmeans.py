@@ -24,11 +24,12 @@ from the update (they should not drag a base away from its cluster).
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import numpy.typing as npt
 
 _BIG = jnp.float32(4.0e9)  # lexicographic scale: cost dominates magnitude
 
@@ -89,7 +90,7 @@ def fit_bases(
     sample = sample.astype(jnp.int32)
     k = num_bases
 
-    def assign(bases):
+    def assign(bases: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
         d = wrapped_delta(sample, bases, word_bits)
         m = delta_magnitude(d)
         a = jnp.argmin(m.astype(jnp.float32), axis=1)  # nearest value (geometry)
@@ -97,7 +98,7 @@ def fit_bases(
             m, a[:, None], axis=1
         )[:, 0]
 
-    def _mean_shift(a, d):
+    def _mean_shift(a: jax.Array, d: jax.Array) -> tuple[jax.Array, jax.Array]:
         # clip the pull so (a) far outliers don't fling bases and (b) f32
         # segment sums stay exact enough (|d|<=2^15, n<=2^16 => mean error
         # << 1 code for any real cluster).
@@ -106,7 +107,7 @@ def fit_bases(
         dsum = jax.ops.segment_sum(d_upd, a, num_segments=k)
         return cnt, jnp.where(cnt > 0, dsum / jnp.maximum(cnt, 1.0), 0.0)
 
-    def _bits_shift(a, d, mean_shift):
+    def _bits_shift(a: jax.Array, d: jax.Array, mean_shift: jax.Array) -> jax.Array:
         """The 'modified' update (paper §II.A): among candidate shifts —
         the vanilla mean plus cluster delta-quantiles — pick the one that
         minimises the cluster's encoded bits.  Mean is always a candidate,
@@ -129,7 +130,7 @@ def fit_bases(
         best = jnp.argmin(tot, axis=1)                        # (k,)
         return jnp.take_along_axis(cands.T, best[:, None], axis=1)[:, 0].astype(jnp.float32)
 
-    def step(bases, _):
+    def step(bases: jax.Array, _: None) -> tuple[jax.Array, None]:
         a, d, m = assign(bases)
         cnt, mean_shift = _mean_shift(a, d)
         if modified:
@@ -152,18 +153,18 @@ def fit_bases(
     a, d, m = assign(bases)
     onehot = jax.nn.one_hot(a, k, dtype=jnp.float32)  # (n, k)
     n_tot = onehot.sum(axis=0)  # (k,)
-    bits = []
+    per_width = []
     for w in width_set:
         fit_w = (m < (1 << (w - 1))).astype(jnp.float32)
         n_fit = (onehot * fit_w[:, None]).sum(axis=0)
-        bits.append(n_fit * w + (n_tot - n_fit) * word_bits)
-    bits = jnp.stack(bits, axis=0)  # (n_widths, k)
+        per_width.append(n_fit * w + (n_tot - n_fit) * word_bits)
+    bits = jnp.stack(per_width, axis=0)  # (n_widths, k)
     widths = jnp.asarray(width_set, dtype=jnp.int32)[jnp.argmin(bits, axis=0)]
     return bases, widths
 
 
 def fit_bases_host(
-    data_words: np.ndarray,
+    data_words: npt.NDArray[Any],
     *,
     num_bases: int,
     width_set: tuple[int, ...],
@@ -172,7 +173,7 @@ def fit_bases_host(
     sample_words: int = 1 << 16,
     modified: bool = True,
     seed: int = 0,
-) -> tuple[np.ndarray, np.ndarray]:
+) -> tuple[npt.NDArray[np.int32], npt.NDArray[np.int32]]:
     """Host convenience wrapper: subsample, drop zero words, fit.
 
     Mirrors the paper's offline "background data analysis" over a dump.
@@ -197,4 +198,4 @@ def fit_bases_host(
         iters=iters,
         modified=modified,
     )
-    return np.asarray(bases), np.asarray(widths)
+    return np.asarray(bases, dtype=np.int32), np.asarray(widths, dtype=np.int32)

@@ -20,12 +20,16 @@ validation test compares against plain psum at bf16-transport tolerance.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.format import BaseTable
+from repro.core.format import (
+    DEFAULT_NUM_BASES,
+    DEFAULT_OUTLIER_CAP,
+    DEFAULT_PAGE_WORDS,
+    BaseTable,
+)
 from repro.core.gbdi_fr import FRConfig
 from repro.kernels import xla as fr_xla
 
@@ -36,8 +40,10 @@ from repro.kernels import xla as fr_xla
 # decode to 0 where v1 decoded a clamped nearest-base value — both are
 # wrong in float space, and `blob['n_dropped']` reports either.  Tables
 # must be fitted under THIS config (see trainer._refit_fr).
-GRAD_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14,
-                   width_set=(8,), bucket_caps=(2048,), outlier_cap=64)
+GRAD_FR = FRConfig(word_bits=16, page_words=DEFAULT_PAGE_WORDS,
+                   num_bases=DEFAULT_NUM_BASES, width_set=(8,),
+                   bucket_caps=(DEFAULT_PAGE_WORDS,),
+                   outlier_cap=DEFAULT_OUTLIER_CAP)
 
 
 def pod_shard_map(f, mesh, in_specs, out_specs, *, manual_axes=("pod",)):

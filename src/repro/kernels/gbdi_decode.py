@@ -10,11 +10,13 @@ encoder's compaction one-hot — no dynamic gather/scatter anywhere.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.format import WORD16_MASK, TableLike, as_base_table
 from repro.core.gbdi_fr import FRConfig
 from repro.kernels.gbdi_encode import (
     DEFAULT_PAGES_PER_TILE,
@@ -26,7 +28,9 @@ from repro.kernels.gbdi_encode import (
 )
 
 
-def _gather_chunks(rank, inclass, sub, cap: int):
+def _gather_chunks(
+    rank: jax.Array, inclass: jax.Array, sub: jax.Array, cap: int
+) -> jax.Array:
     """``sub[:, rank]`` where ``inclass`` via chunked one-hot reduce."""
     out = jnp.zeros(rank.shape, jnp.int32)
     for c0 in range(0, cap, SLOT_CHUNK):
@@ -38,9 +42,10 @@ def _gather_chunks(rank, inclass, sub, cap: int):
 
 
 def _decode_kernel(
-    ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, *refs,
+    ptr_ref: Any, delta_ref: Any, oval_ref: Any, oidx_ref: Any, nout_ref: Any,
+    *refs: Any,
     cfg: FRConfig, k_pad: int,
-):
+) -> None:
     prof_ref = refs[0] if cfg.num_profiles > 1 else None
     bases_ref, cls_ref, x_ref = refs[-3:]
     T, P = x_ref.shape
@@ -48,7 +53,7 @@ def _decode_kernel(
     bases = bases_ref[...][0]                              # (k_pad,)
     cls = cls_ref[...][0]
 
-    def unpack(p, bits, n):
+    def unpack(p: jax.Array, bits: int, n: int) -> jax.Array:
         per = 32 // bits
         sh = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, None, :]
         fields = (p.astype(jnp.uint32)[:, :, None] >> sh) & jnp.uint32((1 << bits) - 1)
@@ -66,7 +71,7 @@ def _decode_kernel(
     # per-class sub-stream gather at the recomputed page-order ranks
     packed = delta_ref[...]
 
-    def gather_deltas(profile: int):
+    def gather_deltas(profile: int) -> jax.Array:
         delta = jnp.zeros((T, P), jnp.int32)
         for i, (w, cap, off) in enumerate(
             zip(cfg.width_set, cfg.profiles[profile],
@@ -92,7 +97,7 @@ def _decode_kernel(
 
     val = base_val + delta
     if wb == 16:
-        val = val & 0xFFFF
+        val = val & WORD16_MASK
     val = jnp.where(code == cfg.zero_code, 0, val)
 
     live = (jnp.arange(cap_out)[None, :] < nout_ref[...])       # (T, cap_out)
@@ -110,14 +115,12 @@ def _decode_kernel(
 @functools.partial(jax.jit, static_argnames=("cfg", "pages_per_tile", "interpret"))
 def gbdi_decode_pallas(
     blob: dict[str, jax.Array],
-    table,                         # BaseTable (or bare bases, v1 compat)
+    table: TableLike,              # BaseTable (or bare bases, v1 compat)
     cfg: FRConfig,
     *,
     pages_per_tile: int = DEFAULT_PAGES_PER_TILE,
     interpret: bool = True,
 ) -> jax.Array:
-    from repro.core.format import as_base_table
-
     n_pages = blob["ptrs"].shape[0]
     assert n_pages % pages_per_tile == 0
     _check_vmem(cfg, pages_per_tile)

@@ -27,12 +27,20 @@ inside the 16 MiB/core budget next to the packed outputs.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.format import class_indices
+from repro.core.format import (
+    WORD16_HALF,
+    WORD16_MASK,
+    BaseTable,
+    TableLike,
+    class_indices,
+    half_span,
+)
 from repro.core.gbdi_fr import FRConfig
 
 DEFAULT_PAGES_PER_TILE = 4
@@ -69,7 +77,7 @@ def _check_vmem(cfg: FRConfig, pages_per_tile: int) -> None:
         )
 
 
-def pad_table(table, cfg: FRConfig) -> tuple[jax.Array, jax.Array]:
+def pad_table(table: BaseTable, cfg: FRConfig) -> tuple[jax.Array, jax.Array]:
     """(1, k_pad) padded bases + width-class indices for the kernels."""
     k_pad = k_padded(cfg)
     pad = k_pad - cfg.num_bases
@@ -101,7 +109,9 @@ def _class_map(cls: jax.Array, values: tuple[int, ...]) -> jax.Array:
     return out
 
 
-def _compact_chunks(rank, keep, payload, cap: int):
+def _compact_chunks(
+    rank: jax.Array, keep: jax.Array, payload: jax.Array, cap: int
+) -> jax.Array:
     """Scatter ``payload[keep]`` to slots ``rank`` of a (T, cap) sub-stream
     via chunked one-hot multiply-reduce (no dynamic scatter on TPU)."""
     cols = []
@@ -116,8 +126,9 @@ def _compact_chunks(rank, keep, payload, cap: int):
 
 
 def _encode_kernel(
-    x_ref, bases_ref, cls_ref, *out_refs, cfg: FRConfig, k_pad: int,
-):
+    x_ref: Any, bases_ref: Any, cls_ref: Any, *out_refs: Any,
+    cfg: FRConfig, k_pad: int,
+) -> None:
     ptr_ref, delta_ref, oval_ref, oidx_ref, nout_ref, nspill_ref, ndrop_ref = out_refs[:7]
     prof_ref = out_refs[7] if cfg.num_profiles > 1 else None
     x = x_ref[...]                                   # (T, P) int32
@@ -129,11 +140,11 @@ def _encode_kernel(
 
     d = x[:, :, None] - bases[None, None, :]         # (T, P, k_pad), wraps
     if wb == 16:
-        d = ((d + (1 << 15)) & 0xFFFF) - (1 << 15)
+        d = ((d + WORD16_HALF) & WORD16_MASK) - WORD16_HALF
     m = jnp.maximum(d, -d - 1)
     # dead entries: table padding and foreign-width bases (sentinel class)
     valid = ((jnp.arange(k_pad) < cfg.num_bases) & (cls < cfg.num_classes))[None, None, :]
-    halfs = _class_map(cls, tuple(1 << (w - 1) for w in cfg.width_set))
+    halfs = _class_map(cls, tuple(half_span(w) for w in cfg.width_set))
     fits = (m < halfs[None, None, :]) & valid
     widths = _class_map(cls, cfg.width_set)
     cost = jnp.where(fits, widths[None, None, :], BIG)   # (T, P, k_pad)
@@ -145,13 +156,13 @@ def _encode_kernel(
     out_cand0 = (~found) & (~is_zero)
 
     # lane packing: shifts + adds (fields are disjoint)
-    def pack(vals, bits):
+    def pack(vals: jax.Array, bits: int) -> jax.Array:
         per = 32 // bits
         y = vals.astype(jnp.uint32).reshape(T, -1, per)
         sh = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, None, :]
         return (y << sh).sum(axis=2, dtype=jnp.uint32).astype(jnp.int32)
 
-    def run_profile(caps):
+    def run_profile(caps: tuple[int, ...]) -> dict[str, jax.Array]:
         """Bucketing + spill chain under one cap profile (oracle parity)."""
         sel, active, out_cand = sel0, active0, out_cand0
         subs, n_spilled = [], jnp.zeros((T,), jnp.int32)
@@ -213,7 +224,7 @@ def _encode_kernel(
             best = jnp.where(better, costs[p], best)
             pid = jnp.where(better, jnp.int32(p), pid)
 
-        def select(field):
+        def select(field: str) -> jax.Array:
             acc = cands[0][field]
             sel_pid = pid[:, None] if acc.ndim == 2 else pid
             for p in range(1, cfg.num_profiles):
@@ -238,7 +249,7 @@ def _encode_kernel(
 )
 def gbdi_encode_pallas(
     x_pages: jax.Array,            # (n_pages, page_words) int32
-    table,                         # BaseTable (or bare bases, v1 compat)
+    table: TableLike,              # BaseTable (or bare bases, v1 compat)
     cfg: FRConfig,
     *,
     pages_per_tile: int = DEFAULT_PAGES_PER_TILE,

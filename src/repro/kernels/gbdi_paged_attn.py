@@ -16,21 +16,27 @@ Outputs (acc, m, l) per (batch, kv-head, group): the caller normalises.
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.format import WORD16_MASK, TableLike, as_base_table
 from repro.core.gbdi_fr import FRConfig
 from repro.kernels.gbdi_decode import _gather_chunks
 from repro.kernels.gbdi_encode import _cumsum_lanes, k_padded, pad_table
 
 
-def _decode_words(ptrs, deltas, ovals, oidx, n_out, bases, cls, cfg: FRConfig, k_pad: int):
+def _decode_words(
+    ptrs: jax.Array, deltas: jax.Array, ovals: jax.Array, oidx: jax.Array,
+    n_out: jax.Array, bases: jax.Array, cls: jax.Array,
+    cfg: FRConfig, k_pad: int,
+) -> jax.Array:
     """Inline GBDI-FR v2 page decode (1 page) -> (page_words,) int32 words."""
     P = cfg.page_words
 
-    def unpack(p, bits, n):
+    def unpack(p: jax.Array, bits: int, n: int) -> jax.Array:
         per = 32 // bits
         sh = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, :]
         f = (p.astype(jnp.uint32)[:, None] >> sh) & jnp.uint32((1 << bits) - 1)
@@ -58,7 +64,7 @@ def _decode_words(ptrs, deltas, ovals, oidx, n_out, bases, cls, cfg: FRConfig, k
 
     val = base_val + delta
     if cfg.word_bits == 16:
-        val = val & 0xFFFF
+        val = val & WORD16_MASK
     val = jnp.where(code == cfg.zero_code, 0, val)
     live = jnp.arange(cfg.outlier_cap) < n_out
     onehot_o = (jnp.arange(P, dtype=jnp.int32)[:, None] == oidx[None, :]) & live[None, :]
@@ -68,13 +74,13 @@ def _decode_words(ptrs, deltas, ovals, oidx, n_out, bases, cls, cfg: FRConfig, k
 
 
 def _kernel(
-    pos_ref, q_ref,
-    kp_ref, kd_ref, kov_ref, koi_ref, kno_ref,
-    vp_ref, vd_ref, vov_ref, voi_ref, vno_ref,
-    bases_ref, cls_ref,
-    acc_ref, m_ref, l_ref,
+    pos_ref: Any, q_ref: Any,
+    kp_ref: Any, kd_ref: Any, kov_ref: Any, koi_ref: Any, kno_ref: Any,
+    vp_ref: Any, vd_ref: Any, vov_ref: Any, voi_ref: Any, vno_ref: Any,
+    bases_ref: Any, cls_ref: Any,
+    acc_ref: Any, m_ref: Any, l_ref: Any,
     *, cfg: FRConfig, k_pad: int, pt: int, n_kv: int, hd: int, groups: int,
-):
+) -> None:
     s = pl.program_id(1)
     n_slots = pl.num_programs(1)
     pos = pos_ref[0, 0]
@@ -82,7 +88,7 @@ def _kernel(
     cls = cls_ref[...][0]
 
     @pl.when(s == 0)
-    def _init():
+    def _init() -> None:
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, -1e30)
         l_ref[...] = jnp.zeros_like(l_ref)
@@ -120,12 +126,11 @@ def _kernel(
 )
 def paged_attention_decode(
     q: jax.Array,            # (B, Kv, G, hd) f32/bf16
-    pages_k: dict, pages_v: dict, table, pos: jax.Array,
+    pages_k: dict[str, jax.Array], pages_v: dict[str, jax.Array],
+    table: TableLike, pos: jax.Array,
     cfg: FRConfig, *, n_kv: int, hd: int, groups: int, interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns un-normalised (acc (B,Kv,G,hd) f32, m (B,Kv,G), l (B,Kv,G))."""
-    from repro.core.format import as_base_table
-
     B, n_slots = pages_k["ptrs"].shape[:2]
     pt = cfg.page_words // (n_kv * hd)
     assert pt >= 1 and cfg.page_words % (n_kv * hd) == 0
@@ -137,7 +142,8 @@ def paged_attention_decode(
     bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
     pos_arr = jnp.full((1, 1), pos, jnp.int32)
 
-    page_specs = lambda lanes: pl.BlockSpec((1, 1, lanes), lambda b, s: (b, s, 0))
+    def page_specs(lanes: int) -> pl.BlockSpec:
+        return pl.BlockSpec((1, 1, lanes), lambda b, s: (b, s, 0))
     kernel = functools.partial(
         _kernel, cfg=cfg, k_pad=k_pad, pt=pt, n_kv=n_kv, hd=hd, groups=groups
     )
@@ -176,7 +182,10 @@ def paged_attention_decode(
     return acc, m, l
 
 
-def merge_softmax(acc1, m1, l1, acc2, m2, l2):
+def merge_softmax(
+    acc1: jax.Array, m1: jax.Array, l1: jax.Array,
+    acc2: jax.Array, m2: jax.Array, l2: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Streaming-softmax merge of two partial attention streams."""
     m = jnp.maximum(m1, m2)
     a1, a2 = jnp.exp(m1 - m), jnp.exp(m2 - m)

@@ -21,9 +21,12 @@ v1 compatibility and treated as all-widest-class).
 """
 from __future__ import annotations
 
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.format import TableLike
 from repro.core.gbdi_fr import (
     FRConfig,
     pages_to_tensor,
@@ -51,7 +54,7 @@ def resolve_backend(backend: str | None = "auto") -> str:
 
 
 def encode_pages(
-    x_pages: jax.Array, table, cfg: FRConfig, backend: str = "auto"
+    x_pages: jax.Array, table: TableLike, cfg: FRConfig, backend: str = "auto"
 ) -> dict[str, jax.Array]:
     backend = resolve_backend(backend)
     if backend == "kernel":
@@ -62,7 +65,7 @@ def encode_pages(
 
 
 def decode_pages(
-    blob: dict[str, jax.Array], table, cfg: FRConfig, backend: str = "auto"
+    blob: dict[str, jax.Array], table: TableLike, cfg: FRConfig, backend: str = "auto"
 ) -> jax.Array:
     backend = resolve_backend(backend)
     if backend == "kernel":
@@ -73,8 +76,8 @@ def decode_pages(
 
 
 def encode_tensor(
-    x: jax.Array, table, cfg: FRConfig, backend: str = "auto"
-) -> tuple[dict[str, jax.Array], dict]:
+    x: jax.Array, table: TableLike, cfg: FRConfig, backend: str = "auto"
+) -> tuple[dict[str, jax.Array], dict[str, Any]]:
     backend = resolve_backend(backend)
     pages, meta = tensor_to_pages(x, cfg)
     pad = (-pages.shape[0]) % DEFAULT_PAGES_PER_TILE if backend == "kernel" else 0
@@ -85,7 +88,7 @@ def encode_tensor(
 
 
 def decode_tensor(
-    blob: dict[str, jax.Array], meta: dict, table, cfg: FRConfig,
+    blob: dict[str, jax.Array], meta: dict[str, Any], table: TableLike, cfg: FRConfig,
     backend: str = "auto",
 ) -> jax.Array:
     pages = decode_pages(blob, table, cfg, backend)

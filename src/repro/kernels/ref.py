@@ -10,12 +10,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.format import TableLike
 from repro.core.gbdi_fr import FRConfig, fr_decode, fr_encode
 
 
-def encode_ref(x_pages: jax.Array, table, cfg: FRConfig):
+def encode_ref(x_pages: jax.Array, table: TableLike, cfg: FRConfig) -> dict[str, jax.Array]:
     return fr_encode(x_pages, table, cfg)
 
 
-def decode_ref(blob, table, cfg: FRConfig):
+def decode_ref(blob: dict[str, jax.Array], table: TableLike, cfg: FRConfig) -> jax.Array:
     return fr_decode(blob, table, cfg)

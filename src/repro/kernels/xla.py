@@ -32,14 +32,14 @@ from __future__ import annotations
 
 import functools
 from collections import OrderedDict
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import format as fmt
-from repro.core.format import as_base_table
+from repro.core.format import TableLike, as_base_table
 from repro.core.gbdi_fr import FRConfig, pack_lanes, unpack_lanes
 
 
@@ -55,23 +55,23 @@ class PreparedTable(NamedTuple):
 # memoized table -> device constants
 # ---------------------------------------------------------------------------
 
-_PREP_CACHE: "OrderedDict[tuple, PreparedTable]" = OrderedDict()
+_PREP_CACHE: "OrderedDict[tuple[Any, ...], PreparedTable]" = OrderedDict()
 _PREP_STATS = {"hits": 0, "misses": 0}
 _PREP_CAP = 32
 
 
-def _build_prepared(table, cfg: FRConfig) -> PreparedTable:
+def _build_prepared(table: TableLike, cfg: FRConfig) -> PreparedTable:
     t = as_base_table(table, default_width=cfg.widest_bits)
     bases = jnp.asarray(t.bases, jnp.int32)
     widths = jnp.asarray(t.widths, jnp.int32)
     return PreparedTable(bases, widths, fmt.class_indices(widths, cfg.width_set))
 
 
-_DIGEST_CACHE: "OrderedDict[int, tuple[object, tuple]]" = OrderedDict()
+_DIGEST_CACHE: "OrderedDict[int, tuple[object, tuple[Any, ...]]]" = OrderedDict()
 _DIGEST_CAP = 64
 
 
-def _leaf_digest(leaf) -> tuple:
+def _leaf_digest(leaf: Any) -> tuple[Any, ...]:
     """(sha1 of bytes, shape, dtype) of one table leaf, memoized per leaf
     *object* so the device->host copy + hash is paid once per table, not
     once per dispatch.  The memo pins the leaf, so its ``id()`` cannot be
@@ -93,7 +93,7 @@ def _leaf_digest(leaf) -> tuple:
     return dig
 
 
-def _table_digest(leaves) -> tuple:
+def _table_digest(leaves: list[Any]) -> tuple[Any, ...]:
     """Content key for a table's leaves (tables are tiny: k <= 254 int32
     pairs).  Unlike a bare ``id()`` key this is self-describing — equal-
     content tables (e.g. a refit landing on identical values, or the same
@@ -102,7 +102,7 @@ def _table_digest(leaves) -> tuple:
     return tuple(_leaf_digest(leaf) for leaf in leaves)
 
 
-def prepare_table(table, cfg: FRConfig) -> PreparedTable:
+def prepare_table(table: TableLike | PreparedTable, cfg: FRConfig) -> PreparedTable:
     """Memoized BaseTable -> :class:`PreparedTable` conversion.
 
     Keyed by the *content* of the table's leaves (digest of bytes + shape
@@ -159,7 +159,9 @@ def _wrapped_delta_b(x: jax.Array, bases: jax.Array, word_bits: int) -> jax.Arra
     return ((d + half) & (span - 1)) - half
 
 
-def _compact(mask: jax.Array, vals: jax.Array, csum: jax.Array, cap: int):
+def _compact(
+    mask: jax.Array, vals: jax.Array, csum: jax.Array, cap: int
+) -> tuple[jax.Array, jax.Array]:
     """Stream-compact ``vals`` at the first ``cap`` masked page positions.
 
     Output slot ``j`` holds ``vals`` at the page position of the ``j``-th
@@ -319,7 +321,7 @@ def _decode_batch(blob: dict[str, jax.Array], prep: PreparedTable, cfg: FRConfig
 
     val = bases[base_code] + delta
     if wb == 16:
-        val = val & 0xFFFF
+        val = val & fmt.WORD16_MASK
     val = jnp.where(code == cfg.zero_code, 0, val)
 
     # outlier scatter-back: live slots hold distinct page positions, so a
@@ -344,7 +346,9 @@ BLOB_TRAILING = {"ptrs": 1, "deltas": 1, "out_vals": 1, "out_idx": 1,
                  "n_out": 0, "n_spilled": 0, "n_dropped": 0, "profile": 0}
 
 
-def encode_pages(x_pages: jax.Array, table, cfg: FRConfig) -> dict[str, jax.Array]:
+def encode_pages(
+    x_pages: jax.Array, table: TableLike | PreparedTable, cfg: FRConfig
+) -> dict[str, jax.Array]:
     """Encode ``(..., page_words)`` int32 word pages in one jitted dispatch."""
     prep = prepare_table(table, cfg)
     lead = x_pages.shape[:-1]
@@ -355,7 +359,9 @@ def encode_pages(x_pages: jax.Array, table, cfg: FRConfig) -> dict[str, jax.Arra
             for k, v in blob.items()}
 
 
-def decode_pages(blob: dict[str, jax.Array], table, cfg: FRConfig) -> jax.Array:
+def decode_pages(
+    blob: dict[str, jax.Array], table: TableLike | PreparedTable, cfg: FRConfig
+) -> jax.Array:
     """Decode blobs with any leading batch axes -> ``(..., page_words)``."""
     prep = prepare_table(table, cfg)
     lead = blob["n_out"].shape
@@ -369,12 +375,22 @@ def decode_pages(blob: dict[str, jax.Array], table, cfg: FRConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_kv", "hd", "groups"))
-def _paged_attn(q, pages_k, pages_v, prep, pos, cfg: FRConfig, n_kv, hd, groups):
+def _paged_attn(
+    q: jax.Array,
+    pages_k: dict[str, jax.Array],
+    pages_v: dict[str, jax.Array],
+    prep: PreparedTable,
+    pos: jax.Array,
+    cfg: FRConfig,
+    n_kv: int,
+    hd: int,
+    groups: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     B, n_slots = pages_k["ptrs"].shape[:2]
     pt = cfg.page_words // (n_kv * hd)
     S = n_slots * pt
 
-    def decode(pages):
+    def decode(pages: dict[str, jax.Array]) -> jax.Array:
         flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in pages.items()
                 if k in BLOB_TRAILING}
         w = _decode_batch(flat, prep, cfg).reshape(B, S, n_kv, hd)
@@ -396,7 +412,8 @@ def _paged_attn(q, pages_k, pages_v, prep, pos, cfg: FRConfig, n_kv, hd, groups)
 
 def paged_attention_decode(
     q: jax.Array,            # (B, Kv, G, hd)
-    pages_k: dict, pages_v: dict, table, pos: jax.Array,
+    pages_k: dict[str, jax.Array], pages_v: dict[str, jax.Array],
+    table: TableLike | PreparedTable, pos: jax.Array,
     cfg: FRConfig, *, n_kv: int, hd: int, groups: int,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Compiled paged-attention decode over GBDI-FR pages.

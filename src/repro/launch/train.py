@@ -11,7 +11,6 @@ auto-resumes from the latest one (kill and re-run to verify).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.data.pipeline import PipelineConfig, TokenPipeline

@@ -18,8 +18,6 @@ half a terabyte) — logits live per-chunk, vocab-sharded.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ each invocation keeps its own cache.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +22,6 @@ from repro.models.layers import (
     attention_apply,
     attn_init,
     constrain_batch,
-    dense_init,
     mlp_apply,
     mlp_init,
     rmsnorm,

@@ -14,7 +14,6 @@ attention archs (the §Perf serving variant).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -45,12 +45,19 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.format import BaseTable
+from repro.core.format import (
+    DEFAULT_NUM_BASES,
+    DEFAULT_OUTLIER_CAP,
+    DEFAULT_PAGE_WORDS,
+    BaseTable,
+)
 from repro.core.gbdi_fr import FRConfig
 from repro.kernels import xla as fr_xla
 
-KV_FR = FRConfig(word_bits=16, page_words=2048, num_bases=14,
-                 width_set=(8,), bucket_caps=(2048,), outlier_cap=64)
+KV_FR = FRConfig(word_bits=16, page_words=DEFAULT_PAGE_WORDS,
+                 num_bases=DEFAULT_NUM_BASES, width_set=(8,),
+                 bucket_caps=(DEFAULT_PAGE_WORDS,),
+                 outlier_cap=DEFAULT_OUTLIER_CAP)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,14 +80,19 @@ class KVSpec:
     def n_pages(self) -> int:
         return math.ceil(self.max_len / self.page_tokens)
 
+    @property
+    def word_bytes(self) -> int:
+        """Bytes per uncompressed memory word (2 for bf16 rows)."""
+        return self.fr.word_bits // 8
+
     def compressed_bytes(self, batch: int) -> int:
         per_page = self.fr.compressed_bytes_per_page()
         pages = 2 * batch * self.n_pages * per_page  # k and v
-        tail = 2 * batch * self.page_tokens * self.row_words * 2
+        tail = 2 * batch * self.page_tokens * self.row_words * self.word_bytes
         return pages + tail
 
     def raw_bytes(self, batch: int) -> int:
-        return 2 * batch * self.max_len * self.row_words * 2
+        return 2 * batch * self.max_len * self.row_words * self.word_bytes  # k and v
 
 
 def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> dict:

@@ -8,8 +8,6 @@ exchange in :mod:`repro.distributed.collectives` instead of plain psum
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

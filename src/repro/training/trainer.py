@@ -15,15 +15,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from pathlib import Path
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.pipeline import TokenPipeline
 from repro.models.api import Model
 from repro.optim import adamw
 from repro.training.train_step import make_train_step

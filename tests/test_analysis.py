@@ -1,0 +1,543 @@
+"""Tests for the repro.analysis static pass: one firing and one non-firing
+fixture per checker, plus the baseline/CLI workflow and a clean-tree gate.
+
+Fixtures are built as in-memory Projects (ast.parse, no tmp files) so each
+case states exactly the code shape a checker is for.
+"""
+import ast
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    BaselineEntry,
+    BaselineError,
+    all_checks,
+    fast_checks,
+    get_check,
+    run_analysis,
+)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.engine import findings_of
+from repro.analysis.project import Project, SourceFile, load_project
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def make_project(files, root=Path("/proj")):
+    srcs = []
+    for rel, text in files.items():
+        text = textwrap.dedent(text)
+        srcs.append(SourceFile(path=root / rel, rel=rel, text=text,
+                               tree=ast.parse(text)))
+    return Project(root=root, files=srcs)
+
+
+def checks_of(files, check_id):
+    return findings_of(make_project(files), [check_id])
+
+
+# --------------------------------------------------------------------------
+# jit-host-sync
+# --------------------------------------------------------------------------
+
+def test_host_sync_fires_in_jit():
+    fs = checks_of({"src/a.py": """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            y = float(x.sum())
+            z = x.item()
+            w = np.asarray(x)
+            return y + z + w
+    """}, "jit-host-sync")
+    msgs = "\n".join(f.message for f in fs)
+    assert len(fs) == 3
+    assert "float()" in msgs and ".item()" in msgs and "np.asarray()" in msgs
+
+
+def test_host_sync_fires_in_pallas_kernel():
+    fs = checks_of({"src/k.py": """
+        def encode_kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...].item()
+    """}, "jit-host-sync")
+    assert len(fs) == 1 and ".item()" in fs[0].message
+
+
+def test_host_sync_silent_on_host_code_and_literals():
+    fs = checks_of({"src/a.py": """
+        import jax
+        import numpy as np
+
+        def host(x):
+            return float(x.sum()) + np.asarray(x).mean()
+
+        @jax.jit
+        def f(x):
+            cap = float("inf")
+            n = int(1 << 15 - 1)
+            return x * cap * n
+    """}, "jit-host-sync")
+    assert fs == []
+
+
+def test_host_sync_skips_tests():
+    fs = checks_of({"tests/test_a.py": """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x.item()
+    """}, "jit-host-sync")
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# traced-branch
+# --------------------------------------------------------------------------
+
+def test_traced_branch_fires_on_if_and_while():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            while x < 3:
+                x = x + 1
+            return -x
+    """}, "traced-branch")
+    assert len(fs) == 2
+    assert {f.anchor for f in fs} == {"if x > 0:", "while x < 3:"}
+
+
+def test_traced_branch_silent_on_static_and_metadata():
+    fs = checks_of({"src/a.py": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("cfg", "n"))
+        def f(x, cfg, n: int, y=None):
+            if cfg.adaptive:
+                x = x * 2
+            if n > 1:
+                x = x + 1
+            if x.ndim == 2:
+                x = x[None]
+            if y is None:
+                y = x
+            if len(x.shape) == 3:
+                x = x[0]
+            return x + y
+    """}, "traced-branch")
+    assert fs == []
+
+
+def test_traced_branch_nested_fn_owns_its_branches():
+    # the branch on the *outer* traced arg inside a nested fn is still
+    # flagged — the nested fn inherits device context
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        @jax.jit
+        def f(x):
+            def inner(y):
+                if y > 0:
+                    return y
+                return -y
+            return inner(x)
+    """}, "traced-branch")
+    assert len(fs) == 1 and fs[0].anchor == "if y > 0:"
+
+
+# --------------------------------------------------------------------------
+# jit-static-args
+# --------------------------------------------------------------------------
+
+def test_static_args_fires_on_uncovered_config():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        @jax.jit
+        def f(x, cfg):
+            return x * cfg.scale
+    """}, "jit-static-args")
+    assert len(fs) == 1 and "cfg" in fs[0].message
+
+
+def test_static_args_fires_on_undonated_buffer():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        @jax.jit
+        def step(state, x):
+            return state + x
+    """}, "jit-static-args")
+    assert len(fs) == 1 and "donate_argnums" in fs[0].message
+
+
+def test_static_args_fires_on_call_form():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        def f(x, cfg):
+            return x * cfg.scale
+
+        g = jax.jit(f)
+    """}, "jit-static-args")
+    assert len(fs) == 1 and "jax.jit(f)" in fs[0].message
+
+
+def test_static_args_silent_when_declared():
+    fs = checks_of({"src/a.py": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+        def step(state, x, cfg):
+            return state + x * cfg.scale
+    """}, "jit-static-args")
+    assert fs == []
+
+
+def test_static_args_dict_annotation_is_traced_not_config():
+    # regression: dict[str, jax.Array] is a pytree of traced leaves — it
+    # must NOT be treated as a static/config-like annotation
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        @jax.jit
+        def decode(blob: dict[str, jax.Array]):
+            return blob["ptrs"]
+    """}, "jit-static-args")
+    assert fs == []
+
+
+def test_static_args_static_annotation_tuple_of_int():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        @jax.jit
+        def f(x, widths: tuple[int, ...]):
+            return x
+    """}, "jit-static-args")
+    assert len(fs) == 1 and "widths" in fs[0].message
+
+
+# --------------------------------------------------------------------------
+# unseeded-random
+# --------------------------------------------------------------------------
+
+def test_unseeded_random_fires():
+    fs = checks_of({"src/a.py": """
+        import random
+        import numpy as np
+
+        a = np.random.rand(3)
+        rng = np.random.default_rng()
+        b = random.random()
+    """}, "unseeded-random")
+    assert len(fs) == 3
+
+
+def test_unseeded_random_silent_on_seeded_and_tests():
+    fs = checks_of({
+        "src/a.py": """
+            import numpy as np
+
+            rng = np.random.default_rng(0)
+            rng2 = np.random.default_rng(seed=7)
+        """,
+        "tests/test_a.py": """
+            import numpy as np
+
+            a = np.random.rand(3)
+        """,
+    }, "unseeded-random")
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# jit-closure-capture
+# --------------------------------------------------------------------------
+
+def test_closure_capture_fires_on_mutated_global():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        _CACHE = {}
+
+        def put(k, v):
+            _CACHE[k] = v
+
+        @jax.jit
+        def f(x):
+            return x * _CACHE["scale"]
+    """}, "jit-closure-capture")
+    assert len(fs) == 1 and "_CACHE" in fs[0].message
+
+
+def test_closure_capture_fires_on_jit_lambda():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        g = jax.jit(lambda x: x * 2)
+    """}, "jit-closure-capture")
+    assert len(fs) == 1 and "lambda" in fs[0].message
+
+
+def test_closure_capture_silent_on_readonly_global():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        _TABLE = {"scale": 2}
+
+        @jax.jit
+        def f(x):
+            return x * _TABLE["scale"]
+    """}, "jit-closure-capture")
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# format-magic-literal
+# --------------------------------------------------------------------------
+
+def test_magic_literal_fires_in_scoped_dirs():
+    fs = checks_of({"src/repro/kernels/k.py": """
+        from repro.core.gbdi_fr import FRConfig
+
+        def f(v):
+            return ((v + (1 << 15)) & 0xFFFF) - (1 << 15)
+
+        CFG = FRConfig(word_bits=16, page_words=2048)
+    """}, "format-magic-literal")
+    kinds = [f.message for f in fs]
+    assert len(fs) == 4  # 0xFFFF, two (1 << 15), FRConfig(page_words=2048)
+    assert any("WORD16_MASK" in m for m in kinds)
+    assert any("half_span" in m for m in kinds)
+    assert any("DEFAULT_PAGE_WORDS" in m for m in kinds)
+
+
+def test_magic_literal_silent_outside_scope_and_with_constants():
+    fs = checks_of({
+        # core/ is where the constants are *defined* — out of scope
+        "src/repro/core/format.py": "WORD16_MASK = 0xFFFF\n",
+        "src/repro/eval/run.py": "LIMIT = 1 << 15\n",
+        "src/repro/kernels/k.py": """
+            from repro.core.format import WORD16_MASK, DEFAULT_PAGE_WORDS
+            from repro.core.gbdi_fr import FRConfig
+
+            def f(v):
+                return v & WORD16_MASK
+
+            CFG = FRConfig(word_bits=16, page_words=DEFAULT_PAGE_WORDS)
+        """,
+    }, "format-magic-literal")
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# backend-parity
+# --------------------------------------------------------------------------
+
+_PARITY_FULL = {
+    "src/repro/kernels/ref.py": "def encode_ref(x, table, cfg):\n    return x\n",
+    "src/repro/kernels/xla.py": "def encode_pages(x, table, cfg):\n    return x\n",
+    "src/repro/kernels/gbdi_encode.py":
+        "def gbdi_encode_pallas(x, table, cfg):\n    return x\n",
+}
+
+
+def test_backend_parity_silent_when_all_three_exist():
+    fs = checks_of(_PARITY_FULL, "backend-parity")
+    assert fs == []
+
+
+def test_backend_parity_fires_on_missing_twin():
+    files = dict(_PARITY_FULL)
+    del files["src/repro/kernels/gbdi_encode.py"]
+    fs = checks_of(files, "backend-parity")
+    assert len(fs) == 1
+    assert "`encode`" in fs[0].message and "pallas" in fs[0].message
+
+
+def test_backend_parity_ignores_private_defs():
+    files = dict(_PARITY_FULL)
+    files["src/repro/kernels/xla.py"] += "def _decode_batch(b):\n    return b\n"
+    fs = checks_of(files, "backend-parity")
+    assert fs == []  # _decode_batch is private: no decode surface opened
+
+
+# --------------------------------------------------------------------------
+# baseline workflow
+# --------------------------------------------------------------------------
+
+_FIRING_SRC = {"src/a.py": """
+    import numpy as np
+
+    a = np.random.rand(3)
+"""}
+
+
+def test_baseline_suppresses_matching_finding():
+    project = make_project(_FIRING_SRC)
+    [f] = findings_of(project, ["unseeded-random"])
+    bl = Baseline([BaselineEntry(f.check, f.path, f.anchor, "known; legacy")])
+    report = run_analysis(project, checks=[get_check("unseeded-random")], baseline=bl)
+    assert report.ok and report.new == [] and len(report.suppressed) == 1
+    assert report.stale == []
+
+
+def test_baseline_is_line_number_independent():
+    # same flagged line, shifted down 5 lines: anchor still matches
+    shifted = {"src/a.py": "\n\n\n\n\nimport numpy as np\n\na = np.random.rand(3)\n"}
+    project = make_project(shifted)
+    bl = Baseline([BaselineEntry(
+        "unseeded-random", "src/a.py", "a = np.random.rand(3)", "known")])
+    report = run_analysis(project, checks=[get_check("unseeded-random")], baseline=bl)
+    assert report.ok and len(report.suppressed) == 1
+
+
+def test_baseline_stale_entry_reported():
+    project = make_project({"src/a.py": "x = 1\n"})
+    bl = Baseline([BaselineEntry(
+        "unseeded-random", "src/a.py", "a = np.random.rand(3)", "was here once")])
+    report = run_analysis(project, checks=[get_check("unseeded-random")], baseline=bl)
+    assert report.ok  # no new findings ...
+    assert len(report.stale) == 1  # ... but the dead entry is surfaced
+
+
+def test_baseline_stale_only_counts_checks_that_ran():
+    # a --fast run (no project-scoped checkers) must not condemn a
+    # backend-parity entry as stale
+    project = make_project({"src/a.py": "x = 1\n"})
+    bl = Baseline([BaselineEntry("backend-parity", "p.py", "def f(", "j")])
+    report = run_analysis(project, checks=fast_checks(), baseline=bl)
+    assert report.ok and report.stale == []
+
+
+def test_baseline_load_rejects_empty_justification(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"entries": [
+        {"check": "c", "path": "p", "anchor": "a", "justification": "  "}]}))
+    with pytest.raises(BaselineError, match="justification"):
+        Baseline.load(p)
+
+
+def test_baseline_load_rejects_missing_fields_and_dupes(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"entries": [{"check": "c", "path": "p"}]}))
+    with pytest.raises(BaselineError, match="missing field"):
+        Baseline.load(p)
+    e = {"check": "c", "path": "p", "anchor": "a", "justification": "j"}
+    p.write_text(json.dumps({"entries": [e, e]}))
+    with pytest.raises(BaselineError, match="duplicate"):
+        Baseline.load(p)
+
+
+def test_baseline_roundtrip(tmp_path):
+    bl = Baseline([BaselineEntry("c", "p.py", "x = 1", "because")])
+    bl.dump(tmp_path / "b.json")
+    assert Baseline.load(tmp_path / "b.json").entries == bl.entries
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def _write_tree(root: Path, files: dict):
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, capsys):
+    _write_tree(tmp_path, {"src/a.py": "x = 1\n"})
+    rc = cli_main(["src", "--root", str(tmp_path)])
+    assert rc == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+def test_cli_finding_exits_one_and_writes_json(tmp_path, capsys):
+    _write_tree(tmp_path, _FIRING_SRC)
+    out_json = tmp_path / "report.json"
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path),
+                   "--json", str(out_json)])
+    assert rc == 1
+    report = json.loads(out_json.read_text())
+    assert not report["ok"]
+    assert report["new"][0]["check"] == "unseeded-random"
+    assert "unseeded-random" in capsys.readouterr().out
+
+
+def test_cli_baseline_and_stale_exit_codes(tmp_path, capsys):
+    _write_tree(tmp_path, _FIRING_SRC)
+    (tmp_path / "analysis-baseline.json").write_text(json.dumps({"entries": [{
+        "check": "unseeded-random", "path": "src/a.py",
+        "anchor": "a = np.random.rand(3)",
+        "justification": "fixture"}]}))
+    # suppressed by the default <root>/analysis-baseline.json -> clean
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path)])
+    assert rc == 0
+    # fix the code: the entry goes stale, which also gates
+    (tmp_path / "src/a.py").write_text("x = 1\n")
+    rc = cli_main([str(tmp_path / "src"), "--root", str(tmp_path)])
+    assert rc == 1
+    assert "stale baseline entry" in capsys.readouterr().out
+
+
+def test_cli_bad_baseline_exits_two(tmp_path, capsys):
+    _write_tree(tmp_path, {"src/a.py": "x = 1\n"})
+    (tmp_path / "b.json").write_text("{not json")
+    rc = cli_main(["src", "--root", str(tmp_path), "--baseline",
+                   str(tmp_path / "b.json")])
+    assert rc == 2
+
+
+def test_cli_unknown_check_exits_two():
+    assert cli_main(["--checks", "no-such-check"]) == 2
+
+
+def test_cli_syntax_error_exits_two(tmp_path):
+    _write_tree(tmp_path, {"src/a.py": "def f(:\n"})
+    assert cli_main(["src", "--root", str(tmp_path)]) == 2
+
+
+def test_cli_list_checks(capsys):
+    assert cli_main(["--list-checks"]) == 0
+    out = capsys.readouterr().out
+    for c in all_checks():
+        assert c.id in out
+
+
+def test_fast_subset_is_file_scoped():
+    fast = fast_checks()
+    assert fast and all(c.scope == "file" for c in fast)
+    assert {c.id for c in all_checks()} - {c.id for c in fast} == {"backend-parity"}
+
+
+# --------------------------------------------------------------------------
+# the repo itself is clean (the CI gate, in-process)
+# --------------------------------------------------------------------------
+
+def test_repo_tree_is_clean_under_all_checks():
+    project = load_project(
+        [REPO / "src", REPO / "tests", REPO / "benchmarks"], root=REPO)
+    baseline = Baseline.load(REPO / "analysis-baseline.json")
+    report = run_analysis(project, baseline=baseline)
+    assert report.ok, "\n" + report.render_text()
+    assert report.stale == [], "\n" + report.render_text()
+
+
+def test_checker_catalog_documented():
+    doc = (REPO / "docs" / "ANALYSIS.md").read_text()
+    for c in all_checks():
+        assert f"`{c.id}`" in doc, f"checker {c.id} missing from docs/ANALYSIS.md"

@@ -1,6 +1,5 @@
 """B∆I baseline: roundtrip + known-vector sizes."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bdi

@@ -11,7 +11,9 @@ import sys
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed.collectives import GRAD_FR, compressed_pod_mean, plain_pod_mean, pod_shard_map
 from repro.core.gbdi_fr import fit_fr_bases

@@ -47,7 +47,8 @@ def test_collective_wire_bytes_ring_model():
     script = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_stats import analyze_module
 mesh = jax.make_mesh((2, 4), ("data", "model"))

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-from ingest_corpus import build_corpus, build_elf_core  # noqa: E402
+from ingest_corpus import build_corpus  # noqa: E402
 
 from repro.eval import ingest
 from repro.eval.codecs import default_codecs, word_bits_for_dtype

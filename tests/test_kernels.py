@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.gbdi_fr import (
-    FRConfig, fr_decode, fr_encode, fit_fr_bases, tensor_to_pages, pages_to_tensor,
+    FRConfig, fr_decode, fr_encode, fit_fr_bases, tensor_to_pages,
 )
 from repro.kernels import ops
 

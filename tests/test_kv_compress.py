@@ -3,7 +3,6 @@ kernel vs oracle; softmax-merge identity."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core.gbdi_fr import FRConfig, fit_fr_bases
 from repro.kernels.gbdi_paged_attn import merge_softmax, paged_attention_decode

@@ -6,10 +6,9 @@ import subprocess
 import sys
 
 import jax
-import numpy as np
 import pytest
 
-from repro.configs import ARCHS, get_config, reduced
+from repro.configs import ARCHS, reduced
 from repro.models.api import build_model
 
 
@@ -57,7 +56,8 @@ def test_dryrun_tiny_mesh_end_to_end():
     script = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import dataclasses, jax
+import dataclasses
+import jax
 from repro.configs import ARCHS, reduced
 from repro.launch.dryrun import lower_cell, analyse
 from repro.models.config import ShapeConfig

@@ -2,7 +2,6 @@
 trainer failure-recovery, compressed KV cache, serving engine."""
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.checkpoint import ckpt
