@@ -8,8 +8,14 @@ family, written to ``experiments/BENCH_throughput.json``.
 
 Codec roles on CPU: ``gbdi``/``bdi`` are the numpy host codecs, ``fr`` is
 the vmapped jnp oracle, ``fr_xla`` is the compiled batched fast path (the
-CPU datapoint), and ``fr_kernel`` interprets the Pallas kernels on a small
-stream — a correctness reference whose timing is NOT TPU-representative.
+CPU datapoint, fronted by :mod:`repro.kernels.pipeline`), and
+``fr_kernel`` interprets the Pallas kernels on a small stream — a
+correctness reference whose timing is NOT TPU-representative; its rows
+are marked ``truncated`` with the requested size recorded.  Rows carry a
+roofline column (``bytes_moved`` vs the modelled HBM ceiling) and the
+visible ``devices`` count.  The artifact is written incrementally (one
+rewrite per cell); a codec raising mid-sweep marks the failed cell and
+exits non-zero instead of silently emitting a partial-but-plausible JSON.
 
   PYTHONPATH=src python benchmarks/bench_throughput.py            # full baseline
   PYTHONPATH=src python benchmarks/bench_throughput.py --quick    # CI smoke

@@ -31,6 +31,7 @@ from repro.core.format import (
     BaseTable,
 )
 from repro.core.gbdi_fr import FRConfig
+from repro.kernels import pipeline as fr_pipeline
 from repro.kernels import xla as fr_xla
 
 # Gradients are quality-critical: one 8-bit class with a full-page bucket
@@ -76,7 +77,10 @@ def _encode_leaf(g: jax.Array, table: BaseTable):
     words = jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.int32)
     pad = (-words.shape[0]) % GRAD_FR.page_words
     words = jnp.pad(words, (0, pad))
-    return fr_xla.encode_pages(words.reshape(-1, GRAD_FR.page_words), table, GRAD_FR)
+    # pipeline front-end is a no-op under the pod shard_map trace (the mesh
+    # already owns placement); eager unit tests get the sharding-aware path
+    return fr_pipeline.encode_pages(
+        words.reshape(-1, GRAD_FR.page_words), table, GRAD_FR)
 
 
 def _decode_leaf(blob, table: BaseTable, n, shape, dtype):

@@ -108,6 +108,13 @@ class FRCodec:
 
     ``cfg`` overrides the per-word-size default — the ``--sweep`` harness
     uses it to walk num_bases / width_set / bucket_caps grids.
+
+    The ``xla`` backend routes through :mod:`repro.kernels.pipeline`:
+    ``devices`` forces an explicit shard count (default: the pipeline's
+    core-capped auto heuristic) and ``stream_batches > 1`` splits the
+    page batch into that many chunks fed through the double-buffered
+    ``encode_stream`` (host->device copy of chunk i+1 overlaps chunk
+    i's encode).  Both paths are bit-identical to the plain call.
     """
 
     word_bits: int = 16
@@ -115,6 +122,8 @@ class FRCodec:
     name: str = "fr"
     lossless: bool = False
     cfg: FRConfig | None = None
+    devices: int | None = None    # xla backend: explicit shard count
+    stream_batches: int = 0       # xla backend: >1 enables encode_stream
 
     def _config(self) -> FRConfig:
         if self.cfg is not None:
@@ -152,7 +161,20 @@ class FRCodec:
             row_pad = (-pages.shape[0]) % ops.DEFAULT_PAGES_PER_TILE
             if row_pad:
                 pages = np.pad(pages, ((0, row_pad), (0, 0)))
-        blob = dict(ops.encode_pages(jnp.asarray(pages), table, cfg, backend=backend))
+        if backend == "xla":
+            from repro.kernels import pipeline
+
+            if self.stream_batches > 1 and pages.shape[0] >= self.stream_batches:
+                parts = np.array_split(pages, self.stream_batches)
+                blobs = list(pipeline.encode_stream(parts, table, cfg))
+                blob = {k: jnp.concatenate([b[k] for b in blobs])
+                        for k in blobs[0]}
+            else:
+                blob = dict(pipeline.encode_pages(
+                    jnp.asarray(pages), table, cfg, devices=self.devices))
+        else:
+            blob = dict(ops.encode_pages(jnp.asarray(pages), table, cfg,
+                                         backend=backend))
         blob.update(_table=table, _cfg=cfg, _n_words=n)
         return blob
 

@@ -37,8 +37,16 @@ to the repo root (trajectory tracking reads root ``BENCH_*.json``).
 ``--throughput`` is the perf baseline: warmed, median-of-K encode/decode
 GiB/s per codec x workload family (no CR columns, no verification), with
 a ``BENCH_throughput.json`` artifact.  The compiled ``fr_xla`` backend is
-the CPU datapoint; interpret-mode ``fr_kernel`` runs on a small stream as
-a correctness reference, not a throughput claim.
+the CPU datapoint (via the :mod:`repro.kernels.pipeline` front-end, so
+rows record the visible ``devices`` count); interpret-mode ``fr_kernel``
+runs on a small stream as a correctness reference, not a throughput
+claim — those rows carry ``truncated: true`` plus ``n_bytes_requested``
+and are flagged in the table (no silent caps).  Every row is roofline-
+attributed: ``bytes_moved`` (stream in + compressed blob out) against
+the modelled HBM ceiling ``benchmarks/roofline.py`` quotes, as an
+achieved fraction.  With ``--json`` the artifact is rewritten after
+every cell (``complete: false`` until the sweep ends) and a codec
+raising mid-sweep marks its cell ``failed`` and aborts loudly.
 """
 from __future__ import annotations
 
@@ -357,27 +365,59 @@ THROUGHPUT_CODECS = "gbdi,bdi,fr,fr_xla,fr_kernel"
 KERNEL_N_BYTES = 256 << 10
 
 
+def roofline_peak_bytes_s() -> float:
+    """Memory-roofline ceiling the throughput rows normalise against —
+    the same modelled HBM bandwidth ``benchmarks/roofline.py``'s
+    ``peak_bytes_per_s()`` quotes (single source: ``repro.launch.mesh``)."""
+    from repro.launch.mesh import HBM_BW
+
+    return float(HBM_BW)
+
+
 def measure_throughput(
     workload: Workload, codec, data: np.ndarray, *, repeats: int = 5,
+    n_bytes_requested: int | None = None,
 ) -> dict:
-    """Warmed, blocked, median-of-``repeats`` encode/decode GiB/s."""
+    """Warmed, blocked, median-of-``repeats`` encode/decode GiB/s.
+
+    Each row carries its roofline attribution: ``bytes_moved`` (stream
+    read + compressed blob write, the minimal memory traffic of one
+    encode pass), the modelled peak bandwidth, and the achieved fraction
+    of it — plus the visible device count and, when the harness ran the
+    codec on a smaller stream than requested, an explicit ``truncated``
+    marker (no silent caps).
+    """
+    import jax
+
     n_bytes = int(np.ascontiguousarray(data).view(np.uint8).size)
+    requested = n_bytes if n_bytes_requested is None else int(n_bytes_requested)
     model = codec.fit(data)
     blob = _block(codec.encode(data, model))      # warmup: jit + constants
     enc_s = _timed_median(lambda: _block(codec.encode(data, model)), repeats)
     np.asarray(codec.decode(blob))                 # decode warmup
     dec_s = _timed_median(lambda: np.asarray(codec.decode(blob)), repeats)
     gib = n_bytes / (1 << 30)
+    comp_bytes = (int(codec.size_bits(blob)) + 7) // 8
+    bytes_moved = n_bytes + comp_bytes            # stream in + blob out
+    peak = roofline_peak_bytes_s()
     return {
         "workload": workload.name,
         "kind": workload.kind,
         "codec": codec.name,
         "n_bytes": n_bytes,
+        "n_bytes_requested": requested,
+        "truncated": n_bytes < requested,
+        "devices": int(jax.local_device_count()),
         "repeats": max(1, repeats),
         "enc_s": enc_s,
         "dec_s": dec_s,
         "enc_gib_s": gib / max(enc_s, 1e-12),
         "dec_gib_s": gib / max(dec_s, 1e-12),
+        "comp_bytes": comp_bytes,
+        "bytes_moved": bytes_moved,
+        "peak_bytes_s": peak,
+        "enc_roofline_frac": bytes_moved / max(enc_s, 1e-12) / peak,
+        "dec_roofline_frac": bytes_moved / max(dec_s, 1e-12) / peak,
     }
 
 
@@ -391,33 +431,67 @@ def throughput(
     kernel_n_bytes: int = KERNEL_N_BYTES,
     repeats: int = 5,
     seed: int = 0,
+    rows: list[dict] | None = None,
+    on_row=None,
 ) -> list[dict]:
     """One row per (workload, codec): warmed median-of-K encode/decode GiB/s.
 
     ``suite=''`` uses :data:`THROUGHPUT_WORKLOADS` (every family covered);
     any registry suite string narrows/extends the set.
+
+    ``rows``/``on_row`` support incremental artifact writing: every
+    completed row is appended to ``rows`` (the same list that is
+    returned) and ``on_row(row)`` fires after each append.  A codec
+    raising mid-sweep appends a ``failed: True`` cell (workload, codec,
+    error), fires ``on_row`` one last time so the partial artifact
+    records exactly where the sweep died, then re-raises as
+    ``RuntimeError`` — the sweep never silently emits a truncated
+    artifact that looks complete.
     """
     if suite:
         workloads = workload_registry.select(suite)
     else:
         workloads = [workload_registry.get(n) for n in THROUGHPUT_WORKLOADS]
     codec_names = [c.strip() for c in codecs.split(",") if c.strip()]
-    rows: list[dict] = []
+    if rows is None:
+        rows = []
     for wl in workloads:
         streams = {nb: wl.generate(nb, seed)
                    for nb in {kernel_n_bytes if c == "fr_kernel" else n_bytes
                               for c in codec_names}}
         for cname in codec_names:
-            data = streams[kernel_n_bytes if cname == "fr_kernel" else n_bytes]
+            actual = kernel_n_bytes if cname == "fr_kernel" else n_bytes
+            data = streams[actual]
+            if actual < n_bytes:
+                print(f"note: {cname}/{wl.name} runs on a {actual}-byte "
+                      f"stream ({n_bytes} requested) — interpret-mode "
+                      f"oracle; row is marked truncated")
             codec = codec_registry.make(cname, wl.word_bits)
-            rows.append(measure_throughput(wl, codec, data, repeats=repeats))
+            try:
+                row = measure_throughput(wl, codec, data, repeats=repeats,
+                                         n_bytes_requested=n_bytes)
+            except Exception as e:
+                row = {"workload": wl.name, "kind": wl.kind, "codec": cname,
+                       "n_bytes": actual, "n_bytes_requested": n_bytes,
+                       "failed": True, "error": f"{type(e).__name__}: {e}"}
+                rows.append(row)
+                if on_row is not None:
+                    on_row(row)
+                raise RuntimeError(
+                    f"throughput sweep aborted: codec {cname!r} failed on "
+                    f"workload {wl.name!r}: {type(e).__name__}: {e}") from e
+            rows.append(row)
+            if on_row is not None:
+                on_row(row)
     return rows
 
 
 def throughput_summary(rows: list[dict]) -> list[dict]:
-    """Mean GiB/s per codec x workload family (kind)."""
+    """Mean GiB/s per codec x workload family (kind); failed cells skipped."""
     groups: dict[tuple[str, str], list[dict]] = {}
     for r in rows:
+        if r.get("failed"):
+            continue
         groups.setdefault((r["codec"], r["kind"]), []).append(r)
     return [
         {
@@ -433,14 +507,24 @@ def throughput_summary(rows: list[dict]) -> list[dict]:
 
 def format_throughput_table(rows: list[dict]) -> str:
     hdr = f"{'workload':<20} {'kind':<7} {'codec':<10} {'MiB':>6} " \
-          f"{'enc GiB/s':>10} {'dec GiB/s':>10}"
+          f"{'enc GiB/s':>10} {'dec GiB/s':>10} {'enc rf':>9} {'dev':>3}"
     lines = [hdr, "-" * len(hdr)]
     for r in rows:
+        if r.get("failed"):
+            lines.append(
+                f"{r['workload']:<20} {r['kind']:<7} {r['codec']:<10} "
+                f"{r['n_bytes'] / (1 << 20):>6.2f} FAILED: {r['error']}")
+            continue
+        trunc = "*" if r.get("truncated") else " "
         lines.append(
             f"{r['workload']:<20} {r['kind']:<7} {r['codec']:<10} "
-            f"{r['n_bytes'] / (1 << 20):>6.2f} {r['enc_gib_s']:>10.3f} "
-            f"{r['dec_gib_s']:>10.3f}"
+            f"{r['n_bytes'] / (1 << 20):>5.2f}{trunc} {r['enc_gib_s']:>10.3f} "
+            f"{r['dec_gib_s']:>10.3f} {r['enc_roofline_frac']:>9.1e} "
+            f"{r['devices']:>3}"
         )
+    if any(r.get("truncated") for r in rows):
+        lines.append("* stream truncated vs requested --bytes "
+                     "(interpret-mode reference rows)")
     for s in throughput_summary(rows):
         lines.append(f"family {s['kind']:<7} {s['codec']:<10} "
                      f"enc={s['enc_gib_s']:.3f} dec={s['dec_gib_s']:.3f} GiB/s")
@@ -448,7 +532,10 @@ def format_throughput_table(rows: list[dict]) -> str:
 
 
 def throughput_artifact(rows: list[dict], *, codecs: str, n_bytes: int,
-                        kernel_n_bytes: int, repeats: int, seed: int) -> dict:
+                        kernel_n_bytes: int, repeats: int, seed: int,
+                        complete: bool = True) -> dict:
+    import jax
+
     from repro.kernels import ops
 
     return {
@@ -459,6 +546,9 @@ def throughput_artifact(rows: list[dict], *, codecs: str, n_bytes: int,
         "repeats": repeats,
         "seed": seed,
         "auto_backend": ops.resolve_backend("auto"),
+        "devices": int(jax.local_device_count()),
+        "peak_bytes_s": roofline_peak_bytes_s(),
+        "complete": complete,       # False while rows stream in mid-sweep
         "rows": rows,
         "summary": throughput_summary(rows),
     }
@@ -593,16 +683,32 @@ def main(argv: list[str] | None = None) -> list[EvalCell]:
         repeats = args.repeats if args.repeats is not None else 5
         codecs = args.codec or THROUGHPUT_CODECS
         kernel_n_bytes = min(KERNEL_N_BYTES, n_bytes)
+        rows: list[dict] = []
+
+        def _partial(_row):
+            # incremental artifact: every completed (or failed) cell lands
+            # on disk immediately, flagged complete=False until the sweep
+            # finishes — a mid-sweep crash leaves an honest partial file
+            if args.json:
+                write_artifact(args.json, throughput_artifact(
+                    rows, codecs=codecs, n_bytes=n_bytes,
+                    kernel_n_bytes=kernel_n_bytes, repeats=repeats,
+                    seed=args.seed, complete=False))
+
         try:
-            rows = throughput(
+            throughput(
                 default_workloads(args.dump_dir), default_codecs(),
                 suite=args.suite
                 if args.suite != "all" else "", codecs=codecs,
                 n_bytes=n_bytes, kernel_n_bytes=kernel_n_bytes,
                 repeats=repeats, seed=args.seed,
+                rows=rows, on_row=_partial if args.json else None,
             )
         except KeyError as e:
             raise SystemExit(f"error: {e.args[0] if e.args else e}")
+        except RuntimeError as e:
+            print(format_throughput_table(rows))
+            raise SystemExit(f"error: {e}")
         print(format_throughput_table(rows))
         if args.csv:
             for r in rows:

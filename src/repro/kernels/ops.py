@@ -9,8 +9,9 @@ Backends (all produce bit-identical blobs):
   slower than compiled code — it runs only when a caller explicitly asks
   for ``'kernel'`` off-TPU.
 * ``'xla'``    — the natively batched jit-compiled path
-  (:mod:`repro.kernels.xla`): one XLA dispatch per page batch, memoized
-  device table constants.  The compiled fast path off TPU.
+  (:mod:`repro.kernels.xla`), fronted by the device-sharding pipeline
+  (:mod:`repro.kernels.pipeline`) for eager callers; memoized device
+  table constants.  The compiled fast path off TPU.
 * ``'auto'``   — resolves to ``'kernel'`` on TPU and ``'xla'`` everywhere
   else; never resolves to interpret mode.  This is the default.
 
@@ -60,7 +61,9 @@ def encode_pages(
     if backend == "kernel":
         return gbdi_encode_pallas(x_pages, table, cfg, interpret=not _on_tpu())
     if backend == "xla":
-        return _xla.encode_pages(x_pages, table, cfg)
+        from repro.kernels import pipeline as _pipeline
+
+        return _pipeline.encode_pages(x_pages, table, cfg)
     return _ref.encode_ref(x_pages, table, cfg)
 
 

@@ -4,19 +4,25 @@ The Pallas kernels only compile on TPU — off-TPU they run in interpret
 mode, which is a correctness oracle, not an engine.  This module is the
 compiled CPU/GPU backend: GBDI-FR v2 encode/decode written *natively
 batched* — every op carries a leading page-batch axis (``(N, page_words)``
-in, ``(N, lanes)`` out) so ``jax.jit`` lowers the whole page batch to one
-fused XLA executable instead of a Python loop (or an interpret-mode grid)
-over single pages.
+in, ``(N, lanes)`` out) so the whole page batch lowers to a handful of
+fused XLA executables instead of a Python loop (or an interpret-mode
+grid) over single pages.  The encode is a short chain of fused stages
+(assign -> per-class compaction -> finalize); eagerly each stage is its
+own dispatch (XLA:CPU compiles the chain ~2.3x faster than the same
+graph as one mega-jit — see the note above ``_assign_batch``), while
+traced callers get everything inlined into their single program.
 
 Bit-compatibility contract: blobs are **bit-identical** to the pure-jnp
 oracle (:mod:`repro.core.gbdi_fr`) and hence to the Pallas kernels, across
 width-set/bucket-cap configs including the narrow -> wide -> outlier spill
-chain.  The batched rewrite preserves the oracle's exact semantics: same
-argmin tie-breaks, the same per-page prefix-sum ranks (``cumsum`` along
-the page axis), the same dead-entry masking for foreign-width bases.  The
-only representational change is replacing the oracle's outlier one-hot
-matmul with an equivalent integer scatter (distinct live positions, same
-values — still bit-exact), asserted in ``tests/test_xla_backend.py``.
+chain.  The staged rewrite preserves the oracle's exact semantics: the
+lexicographic running minimum equals the oracle's width-cost argmin with
+first-index tie-break (``width_set`` is validated ascending), compaction
+ranks match the oracle's page-order prefix sums, dead entries for
+foreign-width bases never win.  The only representational change is
+replacing the oracle's outlier one-hot matmul with an equivalent integer
+scatter (distinct live positions, same values — still bit-exact),
+asserted in ``tests/test_xla_backend.py``.
 
 Device-constant hygiene: :func:`prepare_table` memoizes the BaseTable ->
 device-array conversion (bases/widths upload + width-class codes), so
@@ -31,6 +37,7 @@ axis for the single jitted dispatch, and restore them on the outputs.
 from __future__ import annotations
 
 import functools
+import warnings
 from collections import OrderedDict
 from typing import Any, NamedTuple
 
@@ -147,127 +154,412 @@ def table_cache_clear() -> None:
 
 
 # ---------------------------------------------------------------------------
-# batched encode / decode (leading page axis everywhere)
+# batched encode: a short chain of fused stage dispatches
 # ---------------------------------------------------------------------------
+# Why a chain and not one mega-jit: XLA:CPU's fusion heuristics inflate
+# gather costs inside very large graphs (concatenate-of-gather fusions
+# materialise fat (N, T, 2) index tensors), and the identical computation
+# chained as ~6 dispatches measures ~2.3x faster than the mono graph on a
+# 512-page x 2048-word bf16 stream (``lax.optimization_barrier`` does not
+# recover it).  Under an outer trace — collectives and kv_cache call
+# encode inside jit / shard_map — the stages inline into the caller's
+# single program, so traced callers still get one fused dispatch.
+#
+# Buffer donation: the per-class state is threaded linearly through the
+# chain, so each stage donates its ``state`` argument (the old buffers
+# are dead the moment the stage returns).  XLA:CPU declines donation for
+# some leaves and warns about it at lowering time; ``_encode_batch``
+# silences that advisory warning around its stage calls (on GPU/TPU the
+# donation halves the peak footprint of the chain state).
 
-def _wrapped_delta_b(x: jax.Array, bases: jax.Array, word_bits: int) -> jax.Array:
-    """(N, P, k) signed wrapping deltas — batched twin of kmeans.wrapped_delta."""
-    d = x[..., None] - bases[None, None, :]
-    if word_bits == 32:
-        return d
-    span, half = (1 << word_bits), (1 << (word_bits - 1))
-    return ((d + half) & (span - 1)) - half
+#: per-page encoder state threaded through the class chain:
+#: (sel, cls, active, out_cand, n_spilled)
+_EncState = tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]
+_AltTriple = tuple[jax.Array, jax.Array, jax.Array]
 
 
-def _compact(
-    mask: jax.Array, vals: jax.Array, csum: jax.Array, cap: int
-) -> tuple[jax.Array, jax.Array]:
-    """Stream-compact ``vals`` at the first ``cap`` masked page positions.
+def _code_dt(cfg: FRConfig, k: int) -> Any:
+    """Dtype of the lexicographic (class, base) code ``enc = cls*k + idx``."""
+    return jnp.int8 if cfg.num_classes * k < 127 else jnp.int16
 
-    Output slot ``j`` holds ``vals`` at the page position of the ``j``-th
-    masked word (page order); slots past the masked count are 0.  Scatter
-    is serialised on CPU XLA, so the inverse rank map is found with a
-    vmapped binary search over the mask's prefix sum instead (~3x faster,
-    value-identical — parity with the oracle's scatter is test-asserted).
-    Returns ``(compacted (N, cap), positions (N, cap))``.
+
+def _word_dt(cfg: FRConfig) -> Any:
+    """Word arithmetic runs in the word's own dtype: for 16-bit words the
+    int16 two's-complement wraparound *is* the mod-span wrapped delta."""
+    return jnp.int16 if cfg.word_bits == 16 else jnp.int32
+
+
+def _cumsum2(h: jax.Array) -> jax.Array:
+    """Two-level inclusive cumsum along axis 1 (length a multiple of 32):
+    log-shift adds within 32-wide blocks, then a short cumsum of block
+    totals broadcast back — measurably faster than ``jnp.cumsum`` on the
+    wide position histograms this file feeds it."""
+    n, m = h.shape
+    s = h.reshape(n, m // 32, 32).astype(jnp.int16)
+    for sh in (1, 2, 4, 8, 16):
+        s = s + jnp.pad(s, ((0, 0), (0, 0), (sh, 0)))[:, :, :32]
+    tot = s[:, :, -1]
+    boff = jnp.cumsum(tot, axis=1) - tot
+    return (s + boff[:, :, None]).reshape(n, m)
+
+
+def _mask_blocks(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pack an (N, P) bool mask into 32-bit block words plus the inclusive
+    per-block popcount cumsum — the rank half of rank-select compaction."""
+    cdt = jnp.int16 if mask.shape[1] <= 32767 else jnp.int32
+    wm = pack_lanes(mask.astype(jnp.uint32), 1).astype(jnp.uint32)
+    bcsum = jnp.cumsum(jax.lax.population_count(wm).astype(cdt), axis=1)
+    return wm, bcsum
+
+
+def _positions(wm: jax.Array, bcsum: jax.Array, t: int) -> jax.Array:
+    """``pos[j]`` = page index of the (j+1)-th set bit, or >= P when absent.
+
+    Select by histogram rank-select: the block holding target j is the
+    number of blocks whose cumsum is <= j, i.e. a slice of the cumsum of
+    the scatter-histogram of the (clamped) block cumsums — no gather over
+    the page axis at all.  Two small (N, t) gathers (block word + rank
+    before the block) and a 5-step popcount descend finish inside the
+    32-bit block.  Replaces the vmapped per-target binary search of the
+    previous fast path, whose page-axis gathers dominated the profile.
     """
-    P = mask.shape[1]
-    tgt = jnp.arange(1, cap + 1, dtype=csum.dtype)
-    pos = jax.vmap(lambda c: jnp.searchsorted(c, tgt, side="left"))(csum)
-    pos = jnp.clip(pos, 0, P - 1).astype(jnp.int32)
-    out = jnp.take_along_axis(jnp.where(mask, vals, 0), pos, axis=1)
-    live = tgt[None, :] <= csum[:, -1:]
-    return jnp.where(live, out, 0), jnp.where(live, pos, 0)
+    n, nb = wm.shape
+    tgt = jnp.arange(1, t + 1, dtype=bcsum.dtype)[None]
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    m = -(-(t + 1) // 32) * 32
+    hdt = jnp.uint8 if nb < 256 else jnp.int16
+    cl = jnp.minimum(bcsum.astype(jnp.int32), t)
+    hist = jnp.zeros((n, m), hdt).at[rows, cl].add(hdt(1))
+    blk = _cumsum2(hist)[:, :t]                   # (N, t) block index
+    blki = jnp.minimum(blk, nb - 1).astype(jnp.int32)
+    bex = jnp.where(blk > 0,
+                    jnp.take_along_axis(bcsum, jnp.maximum(blki, 1) - 1, axis=1), 0)
+    w = jnp.take_along_axis(wm, blki, axis=1)
+    r = tgt - bex                                 # 1-indexed rank in block
+    off = jnp.zeros((n, t), jnp.int16)
+    for step in (16, 8, 4, 2, 1):
+        c = jax.lax.population_count(
+            w & jnp.uint32((1 << step) - 1)).astype(tgt.dtype)
+        go = r > c
+        r = jnp.where(go, r - c, r)
+        off = jnp.where(go, off + jnp.int16(step), off)
+        w = jnp.where(go, w >> jnp.uint32(step), w & jnp.uint32((1 << step) - 1))
+    return blk.astype(jnp.int32) * 32 + off.astype(jnp.int32)
 
 
-def _bucket_batch(
-    x: jax.Array, d: jax.Array, cost: jax.Array, cls: jax.Array, known: jax.Array,
-    sel: jax.Array, active: jax.Array, out_cand: jax.Array, is_zero: jax.Array,
-    caps: tuple[int, ...], cfg: FRConfig,
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _assign_batch(
+    x: jax.Array, prep: PreparedTable, cfg: FRConfig
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array,
+           tuple[_AltTriple, ...]]:
+    """Base assignment as one fused elementwise pass over all k bases.
+
+    Tracks the running minimum of the lexicographic code ``enc = class*k
+    + base_index`` over fitting bases — equal to the oracle's width-cost
+    argmin with first-index tie-break because ``width_set`` is validated
+    ascending — plus, per spill threshold i, the same minimum restricted
+    to classes > i (the narrowest fitting wider base, precomputed here so
+    bucket overflow needs no second pass over the table).  The (N, P, k)
+    cost tensor of the previous fast path is never materialised; the fit
+    test is two arithmetic shifts (``d`` fits in w bits iff its top
+    ``word_bits - w + 1`` bits are all copies of the sign bit).
+    """
+    bases, widths, cls = prep
+    k = bases.shape[0]          # static under trace: shapes are Python ints
+    nc = cfg.num_classes
+    n, p = x.shape
+    wt = _word_dt(cfg)
+    xw = x.astype(wt)
+    bw = bases.astype(wt)
+    sign_sh = wt(cfg.word_bits - 1)
+
+    known = cls < nc
+    enc_code = jnp.where(known, cls * k + jnp.arange(k, dtype=jnp.int32), nc * k)
+    dt = _code_dt(cfg, k)
+    big = dt(nc * k)
+    code = enc_code.astype(dt)
+    wsh = (widths - 1).astype(wt)
+    thr = [dt((i + 1) * k) for i in range(nc - 1)]
+
+    m0 = jnp.full((n, p), big)
+    malt = [jnp.full((n, p), big) for _ in range(nc - 1)]
+    for j in range(k):
+        d = xw - bw[j]
+        fits = (d >> wsh[j]) == (d >> sign_sh)
+        ej = jnp.where(fits, code[j], big)
+        m0 = jnp.minimum(m0, ej)
+        for i in range(nc - 1):
+            malt[i] = jnp.minimum(malt[i], jnp.where(code[j] >= thr[i], ej, big))
+
+    found = m0 < big
+    sel = jnp.where(found, m0 % dt(k), dt(0))
+    cls_sel = jnp.where(found, m0 // dt(k), dt(0))
+    is_zero = x == 0
+    active = found & ~is_zero
+    out_cand = (~found) & (~is_zero)
+    alts = tuple((jnp.where(mi < big, mi % dt(k), dt(0)), mi // dt(k), mi < big)
+                 for mi in malt)
+    return sel, cls_sel, active, out_cand, is_zero, alts
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "i", "cap"))
+def _class_positions(
+    cls_p: jax.Array, active_p: jax.Array, cfg: FRConfig, i: int, cap: int
+) -> tuple[jax.Array, jax.Array]:
+    """Compaction targets for width class i: the first ``min(cap, P)``
+    in-class page positions plus — when the bucket can overflow — the
+    position of the (cap+1)-th word, the spill boundary consumed by
+    :func:`_class_update`."""
+    p = active_p.shape[1]
+    inclass = active_p & (cls_p == i)
+    wm, bcsum = _mask_blocks(inclass)
+    t = min(cap, p) + (1 if cap < p else 0)
+    return _positions(wm, bcsum, t), inclass
+
+
+def _class_update_impl(
+    x: jax.Array, prep: PreparedTable, state: _EncState,
+    alt: tuple[jax.Array, ...], pos: jax.Array, inclass: jax.Array,
+    cfg: FRConfig, i: int, cap: int,
+) -> tuple[jax.Array, _EncState]:
+    sel_p, cls_p, active_p, out_p, n_spilled = state
+    n, p = x.shape
+    w = cfg.width_set[i]
+    wt = _word_dt(cfg)
+    overflow = cap < p
+    if overflow:
+        bound = pos[:, cap:cap + 1]
+        pos = pos[:, :cap]
+    if cap > p:
+        pos = jnp.pad(pos, ((0, 0), (0, cap - p)), constant_values=p)
+    if cap == 0:
+        sub = jnp.zeros((n, 0), jnp.int32)
+    else:
+        live = pos < p                           # dead slots gather-clamp
+        xs = jnp.take_along_axis(x.astype(wt), pos, axis=1)
+        bs = prep.bases.astype(wt)[
+            jnp.take_along_axis(sel_p, pos, axis=1).astype(jnp.int32)]
+        payload = (xs - bs).astype(jnp.uint32) & jnp.uint32((1 << w) - 1)
+        sub = pack_lanes(jnp.where(live, payload, 0), w)
+    if not overflow:
+        return sub, (sel_p, cls_p, active_p, out_p, n_spilled)
+    iota_p = jnp.arange(p, dtype=jnp.int32)[None]
+    over = inclass & (iota_p >= bound)
+    if i + 1 == cfg.num_classes:
+        # last class: no wider class to spill into — overflow goes
+        # straight to the outlier chain
+        newly_out = over
+    else:
+        ai, ac, ok = alt
+        spill = over & ok
+        sel_p = jnp.where(spill, ai, sel_p)
+        cls_p = jnp.where(spill, ac, cls_p)
+        n_spilled = n_spilled + spill.sum(axis=1, dtype=jnp.int32)
+        newly_out = over & ~ok
+    active_p = active_p & ~newly_out
+    out_p = out_p | newly_out
+    return sub, (sel_p, cls_p, active_p, out_p, n_spilled)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "i", "cap"),
+                   donate_argnums=(2,))
+def _class_update(
+    x: jax.Array, prep: PreparedTable, state: _EncState,
+    alt: tuple[jax.Array, ...], pos: jax.Array, inclass: jax.Array,
+    cfg: FRConfig, i: int, cap: int,
+) -> tuple[jax.Array, _EncState]:
+    """Extract class i's packed delta sub-stream and apply its spill step.
+
+    Words past the bucket cap (page order) re-code to the precomputed
+    wider-class alternative where one fits, else join the outlier
+    candidates.  ``state`` is donated: the chain threads it linearly, so
+    the inputs are dead once the stage returns."""
+    return _class_update_impl(x, prep, state, alt, pos, inclass, cfg, i, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "i", "cap"))
+def _class_update_shared(
+    x: jax.Array, prep: PreparedTable, assign: _EncState,
+    alt: tuple[jax.Array, ...], pos: jax.Array, inclass: jax.Array,
+    cfg: FRConfig, i: int, cap: int,
+) -> tuple[jax.Array, _EncState]:
+    """Non-donating twin of :func:`_class_update` for the first class of a
+    multi-profile probe, where the shared assignment state is re-bucketed
+    by every profile and must stay alive."""
+    return _class_update_impl(x, prep, assign, alt, pos, inclass, cfg, i, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def _finalize_batch(
+    x: jax.Array, is_zero: jax.Array, state: _EncState,
+    subs: tuple[jax.Array, ...], cfg: FRConfig,
 ) -> dict[str, jax.Array]:
-    """Batched spill chain + compaction under one bucket-cap profile —
-    the (N, P) twin of ``gbdi_fr._bucket_page``, pure in its mask args so
-    the adaptive encoder evaluates every profile from one assignment."""
-    N, P = x.shape
-    wb, cap_out = cfg.word_bits, cfg.outlier_cap
-    BIG = jnp.int32(wb + 1)
-
-    subs, n_spilled = [], jnp.zeros((N,), jnp.int32)
-    for i, (w, cap) in enumerate(zip(cfg.width_set, caps)):
-        inclass = active & (cls[sel] == i)
-        csum = jnp.cumsum(inclass.astype(jnp.int32), axis=1)
-        # static shortcut: a full-page bucket (the KV/GRAD single-width
-        # configs) cannot overflow — no spill candidates, no re-code pass
-        no_overflow = cap >= P
-        keep = inclass if no_overflow else inclass & (csum - 1 < cap)
-        over = jnp.zeros_like(inclass) if no_overflow else inclass & ~keep
-        delta = jnp.take_along_axis(d, sel[..., None], axis=2)[..., 0]
-        payload = jnp.where(keep, delta, 0).astype(jnp.uint32) & jnp.uint32((1 << w) - 1)
-        # the kept words are exactly the first `cap` in-class words
-        sub, _ = _compact(inclass, payload, csum, cap)
-        subs.append(pack_lanes(sub, w))
-        if no_overflow or i + 1 == cfg.num_classes:
-            # last class (or unfillable bucket): no wider class to spill
-            # into — overflow goes straight to the outlier chain, exactly
-            # what the oracle's all-BIG wcost argmin resolves to
-            newly_out = over
-        else:
-            wcost = jnp.where((cls[None, None, :] > i) & known[None, None, :], cost, BIG)
-            alt = jnp.argmin(wcost, axis=2).astype(jnp.int32)
-            alt_ok = jnp.take_along_axis(wcost, alt[..., None], axis=2)[..., 0] <= wb
-            sel = jnp.where(over & alt_ok, alt, sel)
-            n_spilled = n_spilled + (over & alt_ok).sum(axis=1, dtype=jnp.int32)
-            newly_out = over & ~alt_ok
-        active = active & ~newly_out
-        out_cand = out_cand | newly_out
-
-    ocsum = jnp.cumsum(out_cand.astype(jnp.int32), axis=1)
-    dropped = out_cand & (ocsum - 1 >= cap_out)
-    out_vals, out_idx = _compact(out_cand, x, ocsum, cap_out)
-
-    code = jnp.where(is_zero, jnp.int32(cfg.zero_code), sel)
-    code = jnp.where(out_cand, jnp.int32(cfg.outlier_code), code)
+    """Outlier compaction, pointer stream and delta concatenation for one
+    bucket-cap profile (``state`` is donated — see the chain note above)."""
+    sel_p, _, _, out_p, n_spilled = state
+    n, p = x.shape
+    dt = sel_p.dtype.type
+    wm_o, bcsum_o = _mask_blocks(out_p)
+    n_total_out = bcsum_o[:, -1].astype(jnp.int32)
+    ocap = cfg.outlier_cap
+    opos = _positions(wm_o, bcsum_o, min(ocap, p))
+    if ocap > p:
+        opos = jnp.pad(opos, ((0, 0), (0, ocap - p)), constant_values=p)
+    olive = opos < p
+    out_vals = jnp.where(
+        olive, jnp.take_along_axis(x, jnp.minimum(opos, p - 1), axis=1), 0)
+    out_idx = jnp.where(olive, opos, 0)
+    code = jnp.where(is_zero, dt(cfg.zero_code), sel_p)
+    code = jnp.where(out_p, dt(cfg.outlier_code), code)
     deltas = (jnp.concatenate(subs, axis=1) if subs
-              else jnp.zeros((N, 0), jnp.int32))
+              else jnp.zeros((n, 0), jnp.int32))
     deltas = jnp.pad(deltas, ((0, 0), (0, cfg.delta_lanes - deltas.shape[1])))
     return {
         "ptrs": pack_lanes(code.astype(jnp.uint32), cfg.ptr_bits),
         "deltas": deltas,
         "out_vals": out_vals,
         "out_idx": out_idx,
-        "n_out": jnp.minimum(out_cand.sum(axis=1, dtype=jnp.int32), cap_out),
+        "n_out": jnp.minimum(n_total_out, ocap),
         "n_spilled": n_spilled,
-        "n_dropped": dropped.sum(axis=1, dtype=jnp.int32),
+        "n_dropped": jnp.maximum(n_total_out - ocap, 0),
     }
 
 
+# ---------------------------------------------------------------------------
+# constant-baked stage twins for the eager path
+# ---------------------------------------------------------------------------
+# The traced-arg stages above keep tables as runtime operands, which is
+# what an outer trace needs — but eagerly it costs ~2x in the assign
+# pass: XLA:CPU lowers shift-by-tensor and per-base dynamic slices far
+# worse than shift-by-immediate.  For concrete tables we instead bake
+# bases/widths/codes into the executable as constants (per-base immediate
+# shifts, dead bases statically skipped, spill minima only updated where
+# the class threshold statically allows) and memoize the compiled
+# closures by table content digest + config.
+
+
+class _ConstStages(NamedTuple):
+    """Compiled encode stages specialised to one table's constants."""
+
+    assign: Any
+    update: Any         # donating ``st`` (single-profile / later classes)
+    update_shared: Any  # keeps ``st`` alive (first class of a probe)
+
+
+_STAGE_CACHE: "OrderedDict[tuple[Any, ...], _ConstStages]" = OrderedDict()
+_STAGE_CAP = 16
+
+
+def _build_const_stages(prep: PreparedTable, cfg: FRConfig) -> _ConstStages:
+    bases = np.asarray(prep.bases)
+    cls_np = np.asarray(prep.cls)
+    k = int(bases.shape[0])
+    nc = cfg.num_classes
+    wt = _word_dt(cfg)
+    dt = _code_dt(cfg, k)
+    big = dt(nc * k)
+    sign_sh = cfg.word_bits - 1
+    bw_const = bases.astype(np.int16 if cfg.word_bits == 16 else np.int32)
+    base_vals = [int(v) for v in bw_const]
+    cls_vals = [int(c) for c in cls_np]
+
+    @jax.jit
+    def assign(
+        x: jax.Array,
+    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array,
+               tuple[_AltTriple, ...]]:
+        n, p = x.shape
+        xw = x.astype(wt)
+        m0 = jnp.full((n, p), big)
+        malt = [jnp.full((n, p), big) for _ in range(nc - 1)]
+        for j in range(k):
+            c = cls_vals[j]
+            if c >= nc:        # foreign-width base: can never win
+                continue
+            d = xw - wt(base_vals[j])
+            fits = (d >> wt(cfg.width_set[c] - 1)) == (d >> wt(sign_sh))
+            ej = jnp.where(fits, dt(c * k + j), big)
+            m0 = jnp.minimum(m0, ej)
+            for i in range(nc - 1):
+                if c > i:      # spill-threshold test is static here
+                    malt[i] = jnp.minimum(malt[i], ej)
+        found = m0 < big
+        sel = jnp.where(found, m0 % dt(k), dt(0))
+        cls_sel = jnp.where(found, m0 // dt(k), dt(0))
+        is_zero = x == 0
+        active = found & ~is_zero
+        out_cand = (~found) & (~is_zero)
+        alts = tuple(
+            (jnp.where(mi < big, mi % dt(k), dt(0)), mi // dt(k), mi < big)
+            for mi in malt)
+        return sel, cls_sel, active, out_cand, is_zero, alts
+
+    def update_impl(
+        x: jax.Array, st: _EncState, alt: tuple[jax.Array, ...],
+        pos: jax.Array, inclass: jax.Array, i: int, cap: int,
+    ) -> tuple[jax.Array, _EncState]:
+        sel_p, cls_p, active_p, out_p, n_spilled = st
+        n, p = x.shape
+        w = cfg.width_set[i]
+        overflow = cap < p
+        if overflow:
+            bound = pos[:, cap:cap + 1]
+            pos = pos[:, :cap]
+        if cap > p:
+            pos = jnp.pad(pos, ((0, 0), (0, cap - p)), constant_values=p)
+        if cap == 0:
+            sub = jnp.zeros((n, 0), jnp.int32)
+        else:
+            live = pos < p
+            xs = jnp.take_along_axis(x.astype(wt), pos, axis=1)
+            bs = jnp.asarray(bw_const)[
+                jnp.take_along_axis(sel_p, pos, axis=1).astype(jnp.int32)]
+            payload = (xs - bs).astype(jnp.uint32) & jnp.uint32((1 << w) - 1)
+            sub = pack_lanes(jnp.where(live, payload, 0), w)
+        if not overflow:
+            return sub, (sel_p, cls_p, active_p, out_p, n_spilled)
+        iota_p = jnp.arange(p, dtype=jnp.int32)[None]
+        over = inclass & (iota_p >= bound)
+        if i + 1 == nc:
+            newly_out = over
+        else:
+            ai, ac, ok = alt
+            spill = over & ok
+            sel_p = jnp.where(spill, ai, sel_p)
+            cls_p = jnp.where(spill, ac, cls_p)
+            n_spilled = n_spilled + spill.sum(axis=1, dtype=jnp.int32)
+            newly_out = over & ~ok
+        active_p = active_p & ~newly_out
+        out_p = out_p | newly_out
+        return sub, (sel_p, cls_p, active_p, out_p, n_spilled)
+
+    return _ConstStages(
+        assign,
+        jax.jit(update_impl, static_argnames=("i", "cap"), donate_argnums=(1,)),
+        jax.jit(update_impl, static_argnames=("i", "cap")),
+    )
+
+
+def _const_stages(prep: PreparedTable, cfg: FRConfig) -> _ConstStages:
+    """Memoized constant-baked stages (key: table content digest + cfg)."""
+    key = (_table_digest(list(prep)), cfg)
+    hit = _STAGE_CACHE.get(key)
+    if hit is not None:
+        _STAGE_CACHE.move_to_end(key)
+        return hit
+    stages = _build_const_stages(prep, cfg)
+    _STAGE_CACHE[key] = stages
+    while len(_STAGE_CACHE) > _STAGE_CAP:
+        _STAGE_CACHE.popitem(last=False)
+    return stages
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _encode_batch(x: jax.Array, prep: PreparedTable, cfg: FRConfig) -> dict[str, jax.Array]:
-    wb = cfg.word_bits
-    bases, widths, cls = prep
-
-    d = _wrapped_delta_b(x, bases, wb)                          # (N, P, k)
-    halfs = jnp.left_shift(jnp.int32(1), widths - 1)
-    fits = jnp.maximum(d, -d - 1) < halfs[None, None, :]        # INT_MIN-safe |d|
-    known = cls < cfg.num_classes
-    BIG = jnp.int32(wb + 1)
-    cost = jnp.where(fits & known[None, None, :], widths[None, None, :], BIG)
-    sel = jnp.argmin(cost, axis=2).astype(jnp.int32)            # (N, P)
-    found = jnp.take_along_axis(cost, sel[..., None], axis=2)[..., 0] <= wb
-    is_zero = x == 0
-    active = found & ~is_zero
-    out_cand = (~found) & (~is_zero)
-
-    # demand probe (batched): bucket every page under every profile from
-    # the same assignment state; keep the per-page argmin of the effective
-    # encoded size (same cost + tie-break as the oracle — bit parity)
-    cands = [
-        _bucket_batch(x, d, cost, cls, known, sel, active, out_cand, is_zero,
-                      caps, cfg)
-        for caps in cfg.profiles
-    ]
-    if cfg.num_profiles == 1:
-        return cands[0]
+def _pick_profile(
+    cands: tuple[dict[str, jax.Array], ...], cfg: FRConfig
+) -> dict[str, jax.Array]:
+    """Per-page profile argmin on the normative cost (exactness first,
+    then serialized size, then profile id — ``cfg.profile_cost_bits``)."""
     costs = jnp.stack([cfg.profile_cost_bits(p, b["n_dropped"])
                        for p, b in enumerate(cands)])           # (nP, N)
     pid = jnp.argmin(costs, axis=0).astype(jnp.int32)           # (N,)
@@ -280,6 +572,53 @@ def _encode_batch(x: jax.Array, prep: PreparedTable, cfg: FRConfig) -> dict[str,
     blob = {k: pick(k) for k in cands[0]}
     blob["profile"] = pid
     return blob
+
+
+def _encode_batch(x: jax.Array, prep: PreparedTable, cfg: FRConfig) -> dict[str, jax.Array]:
+    """Chained encode over a flat (N, page_words) batch.
+
+    Eagerly this issues one dispatch per stage (assign, then positions +
+    update per width class and profile, then finalize/pick); inside an
+    outer trace the same calls inline into the caller's single program.
+    Blobs are bit-identical to the oracle either way.
+    """
+    eager = (jax.core.trace_state_clean()
+             and not any(isinstance(leaf, jax.core.Tracer)
+                         for leaf in (x, *prep)))
+    const = _const_stages(prep, cfg) if eager else None
+    if const is not None:
+        sel, cls_sel, active, out_cand, is_zero, alts = const.assign(x)
+    else:
+        sel, cls_sel, active, out_cand, is_zero, alts = _assign_batch(x, prep, cfg)
+    solo = cfg.num_profiles == 1
+    zero_sp = jnp.zeros(x.shape[:1], jnp.int32)
+    cands = []
+    with warnings.catch_warnings():
+        # XLA:CPU declines donation for some state leaves; advisory only
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        for caps in cfg.profiles:
+            state: _EncState = (sel, cls_sel, active, out_cand, zero_sp)
+            subs = []
+            for i, cap in enumerate(caps):
+                pos, inclass = _class_positions(state[1], state[2],
+                                                cfg=cfg, i=i, cap=cap)
+                alt: tuple[jax.Array, ...] = alts[i] if i + 1 < cfg.num_classes else ()
+                # the first class of a multi-profile probe re-buckets the
+                # shared assignment state, so only later stages may donate it
+                donate = solo or i > 0
+                if const is not None:
+                    fn = const.update if donate else const.update_shared
+                    sub, state = fn(x, state, alt, pos, inclass, i=i, cap=cap)
+                else:
+                    fn2 = _class_update if donate else _class_update_shared
+                    sub, state = fn2(x, prep, state, alt, pos, inclass,
+                                     cfg=cfg, i=i, cap=cap)
+                subs.append(sub)
+            cands.append(_finalize_batch(x, is_zero, state, tuple(subs), cfg=cfg))
+    if solo:
+        return cands[0]
+    return _pick_profile(tuple(cands), cfg=cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -52,6 +52,7 @@ from repro.core.format import (
     BaseTable,
 )
 from repro.core.gbdi_fr import FRConfig
+from repro.kernels import pipeline as fr_pipeline
 from repro.kernels import xla as fr_xla
 
 KV_FR = FRConfig(word_bits=16, page_words=DEFAULT_PAGE_WORDS,
@@ -133,7 +134,9 @@ def _compress_rows(spec: KVSpec, rows: jax.Array, table: BaseTable) -> dict:
     """
     B = rows.shape[0]
     words = _to_words(rows).reshape(B, -1, spec.fr.page_words)
-    blob = dict(fr_xla.encode_pages(words, table, spec.fr))
+    # pipeline front-end: identical XLA chain under the flush trace, device
+    # sharding for eager callers (e.g. offline cache warm-up)
+    blob = dict(fr_pipeline.encode_pages(words, table, spec.fr))
     blob.pop("n_dropped", None)
     blob.pop("n_spilled", None)
     return blob
