@@ -20,7 +20,6 @@ validation test compares against plain psum at bf16-transport tolerance.
 """
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
 
@@ -32,7 +31,6 @@ from repro.core.format import (
 )
 from repro.core.gbdi_fr import FRConfig
 from repro.kernels import pipeline as fr_pipeline
-from repro.kernels import xla as fr_xla
 
 # Gradients are quality-critical: one 8-bit class with a full-page bucket
 # (the v2 single-width special case) — bucket overflow cannot occur, so
@@ -84,7 +82,9 @@ def _encode_leaf(g: jax.Array, table: BaseTable):
 
 
 def _decode_leaf(blob, table: BaseTable, n, shape, dtype):
-    words = fr_xla.decode_pages(blob, table, GRAD_FR).reshape(-1)[:n]
+    # same front-end as encode: no-op under the pod shard_map trace, the
+    # sharding-aware split for eager gradient decode
+    words = fr_pipeline.decode_pages(blob, table, GRAD_FR).reshape(-1)[:n]
     flat = jax.lax.bitcast_convert_type(words.astype(jnp.uint16), jnp.bfloat16)
     return flat.astype(dtype).reshape(shape)
 

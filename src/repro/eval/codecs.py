@@ -24,6 +24,7 @@ frame identically.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import numpy as np
@@ -31,6 +32,26 @@ import numpy as np
 from repro.core import bdi, gbdi
 from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode
 from repro.eval.registry import CodecRegistry
+
+
+@functools.lru_cache(maxsize=None)
+def _word_cast(word_bits: int):
+    """Jitted signed-page-words -> unsigned-words cast (value-identical to
+    :func:`repro.core.gbdi.signed_to_words`, but on device: decoded pages
+    are already masked to word range, so for 16-bit words this also halves
+    the device->host transfer)."""
+    import jax
+    import jax.numpy as jnp
+
+    if word_bits == 32:
+        def cast32(pages):
+            return jax.lax.bitcast_convert_type(
+                pages.astype(jnp.int32), jnp.uint32)
+        return jax.jit(cast32)
+
+    def cast16(pages):
+        return (pages & 0xFFFF).astype(jnp.uint16)
+    return jax.jit(cast16)
 
 
 def word_bits_for_dtype(dtype) -> int:
@@ -182,10 +203,35 @@ class FRCodec:
         from repro.kernels import ops
 
         cfg: FRConfig = blob["_cfg"]
-        pages = ops.decode_pages(
-            {k: v for k, v in blob.items() if not k.startswith("_")},
-            blob["_table"], cfg, backend=ops.resolve_backend(self.backend),
-        )
+        inner = {k: v for k, v in blob.items() if not k.startswith("_")}
+        backend = ops.resolve_backend(self.backend)
+        if backend == "xla":
+            import jax.numpy as jnp
+
+            from repro.kernels import pipeline
+
+            # page count is static metadata — read it off the shape, no
+            # device->host sync
+            n_pages = int(np.prod(inner["n_out"].shape))
+            if self.stream_batches > 1 and n_pages >= self.stream_batches:
+                bounds = np.array_split(np.arange(n_pages),
+                                        self.stream_batches)
+                parts = ({k: v[idx[0]:idx[-1] + 1] for k, v in inner.items()}
+                         for idx in bounds)
+                pages = jnp.concatenate(
+                    list(pipeline.decode_stream(parts, blob["_table"], cfg)))
+                pages = _word_cast(cfg.word_bits)(pages)
+            else:
+                # unsigned decode fuses the word cast into the compiled
+                # chain (and halves the 16-bit device->host transfer)
+                pages = pipeline.decode_pages(inner, blob["_table"], cfg,
+                                              devices=self.devices,
+                                              unsigned=True)
+            # flatten on the host view — an eager device reshape would
+            # copy the buffer
+            words = np.asarray(pages).reshape(-1)
+            return words[: blob["_n_words"]]   # host view, no device slice
+        pages = ops.decode_pages(inner, blob["_table"], cfg, backend=backend)
         signed = np.asarray(pages).reshape(-1)[: blob["_n_words"]]
         return gbdi.signed_to_words(signed, cfg.word_bits)
 

@@ -1,12 +1,14 @@
-"""Sharded, double-buffered front-end over the batched XLA encode chain.
+"""Sharded, double-buffered front-end over the batched XLA encode and
+decode chains.
 
-This module owns the *orchestration* layer of the GBDI-FR encode path:
+This module owns the *orchestration* layer of the GBDI-FR fast path:
 device discovery, page-batch padding/splitting across host devices,
-result reassembly, and a streaming interface that overlaps host->device
-transfer with encode.  The per-batch math lives in
-:mod:`repro.kernels.xla`; every path here produces blobs bit-identical
-to a single-device :func:`repro.kernels.xla.encode_pages` call (the
-subprocess parity test in ``tests/test_pipeline.py`` locks this down
+result reassembly, and streaming interfaces that overlap host->device
+transfer with compute.  The per-batch math lives in
+:mod:`repro.kernels.xla`; every path here produces results bit-identical
+to the single-device :func:`repro.kernels.xla.encode_pages` /
+:func:`~repro.kernels.xla.decode_pages` calls (the subprocess parity
+tests in ``tests/test_pipeline.py`` lock this down for both directions
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
 
 Sharding policy (measured on the CI box, 1 physical core, 8 forced host
@@ -201,6 +203,160 @@ def _encode_spmd(
     if pad:
         blob = {k: v[:n_rows] for k, v in blob.items()}
     return dict(blob)
+
+
+# ---------------------------------------------------------------------------
+# decode front-end: same sharding policy, blobs in -> word pages out
+# ---------------------------------------------------------------------------
+
+def _flat_blob(
+    blob: dict[str, jax.Array], lead: tuple[int, ...]
+) -> dict[str, jax.Array]:
+    return {k: v.reshape((-1,) + v.shape[len(lead):])
+            for k, v in blob.items() if k in BLOB_TRAILING}
+
+
+def _pad_blob_rows(
+    flat: dict[str, jax.Array], shards: int
+) -> dict[str, jax.Array]:
+    # zero rows decode as valid all-zero-blob pages, and the padding is
+    # stripped before reassembly returns
+    return {k: _pad_rows(v, shards)[0] for k, v in flat.items()}
+
+
+def decode_pages(
+    blob: dict[str, jax.Array],
+    table: TableLike | PreparedTable,
+    cfg: FRConfig,
+    *,
+    devices: Sequence[Any] | int | None = None,
+    unsigned: bool = False,
+) -> jax.Array:
+    """Decode blobs with any leading axes -> ``(..., page_words)`` words.
+
+    The twin of :func:`encode_pages`: ``devices=None`` picks
+    :func:`auto_shards` shards, an int/device list forces the split, and
+    traced callers (the serving KV cache decompresses inside ``jit``)
+    fall through to the plain XLA chain.  Every path is bit-identical to
+    single-device :func:`repro.kernels.xla.decode_pages`.
+
+    ``unsigned=True`` returns the uint16/uint32 unsigned-word view of
+    the decoded words with the cast fused into the decode program (see
+    :func:`repro.kernels.xla._decode_batch`) — value-identical to
+    casting the default signed int32 output mod ``2**word_bits``.
+    """
+    prep = prepare_table(table, cfg)
+    udt = jnp.uint16 if cfg.word_bits == 16 else jnp.uint32
+    leaves = jax.tree_util.tree_leaves(blob)
+    if _is_traced(*leaves, *prep):
+        words = _xla.decode_pages(blob, prep, cfg)
+        # under a trace the cast fuses into the caller's program anyway
+        return words.astype(udt) if unsigned else words
+    lead = blob["n_out"].shape
+    flat = _flat_blob(blob, lead)
+    n_rows = flat["n_out"].shape[0]
+    devs = _resolve_devices(devices)
+    if len(devs) <= 1 or n_rows < 2 * len(devs):
+        # already flattened + table prepared: go straight to the fused
+        # batch chain, skipping the public wrapper's re-normalisation
+        words = _xla._decode_batch(flat, prep, cfg, unsigned=unsigned)
+    else:
+        words = _decode_split(flat, prep, cfg, devs, unsigned=unsigned)
+    return words.reshape(lead + (cfg.page_words,))
+
+
+def _decode_split(
+    flat: dict[str, jax.Array], prep: PreparedTable, cfg: FRConfig,
+    devs: Sequence[Any], *, unsigned: bool = False,
+) -> jax.Array:
+    n_rows = flat["n_out"].shape[0]
+    padded = _pad_blob_rows(flat, len(devs))
+    per = padded["n_out"].shape[0] // len(devs)
+    # queue every shard's transfer before the first decode dispatch
+    shards = [jax.device_put({k: v[d * per:(d + 1) * per]
+                              for k, v in padded.items()}, dev)
+              for d, dev in enumerate(devs)]
+    parts = [_xla._decode_batch(shard, prep, cfg, unsigned=unsigned)
+             for shard in shards]
+    parts = [jax.device_put(p, devs[0]) for p in parts]
+    return jnp.concatenate(parts, axis=0)[:n_rows]
+
+
+def decode_pages_sharded(
+    blob: dict[str, jax.Array],
+    table: TableLike | PreparedTable,
+    cfg: FRConfig,
+    *,
+    devices: Sequence[Any] | int | None = None,
+    mode: str = "split",
+) -> jax.Array:
+    """Always-sharded decode: every listed device gets a row slice.
+
+    Mirrors :func:`encode_pages_sharded` — ``mode="split"`` is the
+    explicit per-device dispatch, ``mode="spmd"`` one ``pod_shard_map``
+    program (same caveats as the encode twin).
+    """
+    if mode not in ("split", "spmd"):
+        raise ValueError(f"unknown mode {mode!r}; choose 'split' or 'spmd'")
+    prep = prepare_table(table, cfg)
+    devs = local_devices() if devices is None else _resolve_devices(devices)
+    lead = blob["n_out"].shape
+    flat = _flat_blob(blob, lead)
+    if mode == "split" or len(devs) == 1:
+        words = _decode_split(flat, prep, cfg, devs)
+    else:
+        words = _decode_spmd(flat, prep, cfg, devs)
+    return words.reshape(lead + (cfg.page_words,))
+
+
+def _decode_spmd(
+    flat: dict[str, jax.Array], prep: PreparedTable, cfg: FRConfig,
+    devs: Sequence[Any],
+) -> jax.Array:
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec
+
+    from repro.distributed import collectives
+
+    pod_shard_map: Any = collectives.pod_shard_map
+    n_rows = flat["n_out"].shape[0]
+    padded = _pad_blob_rows(flat, len(devs))
+    mesh = Mesh(np.asarray(devs), ("pod",))
+    # blobs out of _reassemble are committed to one device; distribute the
+    # rows over the mesh before entering the partitioned program
+    sharding = jax.sharding.NamedSharding(mesh, PartitionSpec("pod"))
+    padded = jax.device_put(padded, sharding)
+    dec = pod_shard_map(
+        lambda b: _xla.decode_pages(b, prep, cfg), mesh,
+        in_specs=PartitionSpec("pod"), out_specs=PartitionSpec("pod"))
+    return dec(padded)[:n_rows]
+
+
+def decode_stream(
+    blobs: Iterable[dict[str, jax.Array]],
+    table: TableLike | PreparedTable,
+    cfg: FRConfig,
+    *,
+    device: Any | None = None,
+) -> Iterator[jax.Array]:
+    """Decode a stream of blob batches, double-buffering host->device.
+
+    The twin of :func:`encode_stream`: blob batch ``i+1`` transfers while
+    batch ``i`` decodes.  Yields one ``(..., page_words)`` word array per
+    input blob, in order, bit-identical to
+    :func:`repro.kernels.xla.decode_pages` on the same blob.
+    """
+    dev = device if device is not None else local_devices()[0]
+    prep = prepare_table(table, cfg)
+    it = iter(blobs)
+    try:
+        pending = jax.device_put(next(it), dev)
+    except StopIteration:
+        return
+    for nxt in it:
+        cur, pending = pending, jax.device_put(nxt, dev)
+        yield _xla.decode_pages(cur, prep, cfg)
+    yield _xla.decode_pages(pending, prep, cfg)
 
 
 def encode_stream(

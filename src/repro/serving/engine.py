@@ -14,12 +14,15 @@ attention archs (the §Perf serving variant).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serving import kv_cache
+from repro.serving.kv_cache import KVSpec
 
 
 @dataclasses.dataclass
@@ -104,3 +107,50 @@ class Engine:
             if len(r.out) >= r.max_new:
                 r.done = True
         return any(r is not None and not r.done for r in self.slot_req)
+
+
+class KVSession:
+    """Serving-shaped driver over one compressed KV cache (single layer).
+
+    Owns the cache tree and the decode position; every entry point is one
+    jitted dispatch.  This is the surface the decode-steady-state
+    microbench (``benchmarks/decode_microbench.py``) and the incremental
+    property tests drive: ``step`` is the per-token serving cost under
+    measurement — with ``spec.resident_decode`` it overlays the raw tail
+    over the flush-maintained decoded region (flat in context length);
+    without it every step re-decodes all pages (linear).
+    """
+
+    def __init__(self, spec: KVSpec, batch: int, table, *,
+                 backend: str = "auto"):
+        self.spec, self.backend = spec, backend
+        self.cache = kv_cache.init_compressed(spec, batch, table)
+        self.pos = 0
+        self._append = jax.jit(functools.partial(kv_cache.append, spec))
+        self._attend = jax.jit(functools.partial(
+            kv_cache.attention_decode, spec, backend=backend))
+
+        def prefill_body(spec, ks, vs, cache, start):
+            def body(i, c):
+                k = jax.lax.dynamic_slice_in_dim(ks, i, 1, axis=1)
+                v = jax.lax.dynamic_slice_in_dim(vs, i, 1, axis=1)
+                return kv_cache.append(spec, c, k, v, start + i)
+            return jax.lax.fori_loop(0, ks.shape[1], body, cache)
+
+        self._prefill = jax.jit(functools.partial(prefill_body, spec))
+
+    def prefill(self, ks: jax.Array, vs: jax.Array) -> None:
+        """Append a whole (B, T, Kv, hd) context in one fori_loop dispatch."""
+        self.cache = self._prefill(ks, vs, self.cache, jnp.int32(self.pos))
+        self.pos += int(ks.shape[1])
+
+    def append(self, k: jax.Array, v: jax.Array) -> None:
+        """Append one token's (B, 1, Kv, hd) K/V at the current position."""
+        self.cache = self._append(self.cache, k, v, jnp.int32(self.pos))
+        self.pos += 1
+
+    def step(self, q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+        """One decode step: append this token's K/V, attend with ``q`` over
+        everything appended so far.  Returns (B, 1, H*hd)."""
+        self.append(k, v)
+        return self._attend(q, self.cache, jnp.int32(self.pos - 1))

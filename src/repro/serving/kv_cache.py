@@ -63,10 +63,23 @@ KV_FR = FRConfig(word_bits=16, page_words=DEFAULT_PAGE_WORDS,
 
 @dataclasses.dataclass(frozen=True)
 class KVSpec:
+    """Cache geometry.  ``resident_decode=True`` adds an incremental
+    decoded-page region (``k_dec``/``v_dec`` bf16 leaves) to the cache
+    tree: every flushed page is decoded ONCE — at flush, from the same
+    blob that landed in the page slots, so capacity drops round-trip
+    identically — and reused by every later read.  ``read_full`` then
+    costs O(tail overlay) per step instead of O(all pages), at the HBM
+    price of keeping the decoded copy resident (the compressed pages
+    remain the transport/storage format; ``compressed_bytes`` counts
+    both when the region is enabled).  Invariant (property-tested): at
+    every step ``k_dec``/``v_dec`` are bit-identical to a from-scratch
+    ``_decompress_all`` of the page slots."""
+
     n_kv: int
     head_dim: int
     max_len: int
     fr: FRConfig = KV_FR
+    resident_decode: bool = False
 
     @property
     def row_words(self) -> int:
@@ -90,6 +103,9 @@ class KVSpec:
         per_page = self.fr.compressed_bytes_per_page()
         pages = 2 * batch * self.n_pages * per_page  # k and v
         tail = 2 * batch * self.page_tokens * self.row_words * self.word_bytes
+        if self.resident_decode:  # decoded copy is resident HBM too
+            pages += 2 * batch * self.n_pages * self.page_tokens \
+                * self.row_words * self.word_bytes
         return pages + tail
 
     def raw_bytes(self, batch: int) -> int:
@@ -114,8 +130,16 @@ def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> dict:
         return z
 
     tail = jnp.zeros((batch, spec.page_tokens, spec.n_kv, spec.head_dim), jnp.bfloat16)
-    return {"k_pages": page_zeros(), "v_pages": page_zeros(),
-            "k_tail": tail, "v_tail": tail, "table": table}
+    cache = {"k_pages": page_zeros(), "v_pages": page_zeros(),
+             "k_tail": tail, "v_tail": tail, "table": table}
+    if spec.resident_decode:
+        # Seed the resident region by decoding the zero page tree, NOT with
+        # plain zeros: a zero blob decodes to bases[0]-derived words, and the
+        # invariant is bit-identity with a from-scratch ``_decompress_all``
+        # for unflushed pages too.
+        cache["k_dec"] = _decompress_all(spec, cache["k_pages"], table)
+        cache["v_dec"] = _decompress_all(spec, cache["v_pages"], table)
+    return cache
 
 
 def _to_words(x16: jax.Array) -> jax.Array:
@@ -143,9 +167,14 @@ def _compress_rows(spec: KVSpec, rows: jax.Array, table: BaseTable) -> dict:
 
 
 def _decompress_all(spec: KVSpec, pages: dict, table: BaseTable) -> jax.Array:
-    """-> (B, n_pages*page_tokens, Kv, hd) bf16; one batched dispatch."""
+    """-> (B, n_pages*page_tokens, Kv, hd) bf16; one batched dispatch.
+
+    Routed through the pipeline front-end: the fused XLA chain under a
+    trace (the jitted serving step), the sharding-aware split for eager
+    offline decompression of a big cache.
+    """
     B = pages["ptrs"].shape[0]
-    words = fr_xla.decode_pages(pages, table, spec.fr)
+    words = fr_pipeline.decode_pages(pages, table, spec.fr)
     return _from_words(words.reshape(B, -1, spec.n_kv, spec.head_dim))
 
 
@@ -169,8 +198,22 @@ def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array
                 ),
                 dst, src,
             )
-        return {**c, "k_pages": put(c["k_pages"], kb), "v_pages": put(c["v_pages"], vb),
-                "k_tail": k_tail, "v_tail": v_tail}
+        out = {**c, "k_pages": put(c["k_pages"], kb), "v_pages": put(c["v_pages"], vb),
+               "k_tail": k_tail, "v_tail": v_tail}
+        if "k_dec" in c:
+            # Incremental decode: decode the just-encoded blob (NOT the raw
+            # tail — capacity-dropped outliers must round-trip identically to
+            # a from-scratch decode of the page slots) and land it at this
+            # page's token offset.  O(one page) per flush; reads reuse it.
+            def dec(blob):
+                w = fr_pipeline.decode_pages(blob, cache["table"], spec.fr)
+                B = w.shape[0]
+                return _from_words(w.reshape(B, pt, spec.n_kv, spec.head_dim))
+            out["k_dec"] = jax.lax.dynamic_update_slice(
+                c["k_dec"], dec(kb), (0, page_id * pt, 0, 0))
+            out["v_dec"] = jax.lax.dynamic_update_slice(
+                c["v_dec"], dec(vb), (0, page_id * pt, 0, 0))
+        return out
 
     def nop(c):
         return {**c, "k_tail": k_tail, "v_tail": v_tail}
@@ -180,9 +223,17 @@ def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array
 
 def read_full(spec: KVSpec, cache: dict, pos: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """-> (K, V, valid) covering [0, pos]: decompressed pages with the raw
-    tail overlaid for the current (unflushed) page."""
-    K = _decompress_all(spec, cache["k_pages"], cache["table"])
-    V = _decompress_all(spec, cache["v_pages"], cache["table"])
+    tail overlaid for the current (unflushed) page.
+
+    With ``spec.resident_decode`` the pages were already decoded at flush
+    time, so this is just the tail overlay — per-step cost stops scaling
+    with context length (the decode work moved to one page per flush).
+    """
+    if "k_dec" in cache:
+        K, V = cache["k_dec"], cache["v_dec"]
+    else:
+        K = _decompress_all(spec, cache["k_pages"], cache["table"])
+        V = _decompress_all(spec, cache["v_pages"], cache["table"])
     pt = spec.page_tokens
     page_id = pos // pt
     K = jax.lax.dynamic_update_slice(
@@ -200,17 +251,24 @@ def attention_decode(
 ) -> jax.Array:
     """q: (B, 1, H, hd) -> (B, 1, H*hd) over the compressed cache.
 
-    ``backend='oracle'`` decompresses every page to HBM then attends (the
-    semantic reference).  ``'xla'``/``'auto'`` (default) attend over the
-    full compressed pages with the compiled paged-attention decode
-    (:func:`repro.kernels.xla.paged_attention_decode`) and merge the raw
+    ``backend='oracle'`` attends over the full decompressed view (the
+    semantic reference).  ``'resident'`` is the same math but requires the
+    ``spec.resident_decode`` incremental region, so no page is decoded on
+    this step at all.  ``'xla'`` attends over the compressed pages with
+    the compiled paged-attention decode
+    (:func:`repro.kernels.xla.paged_attention_decode`) and merges the raw
     tail via the streaming-softmax identity — one batched dispatch, no
-    decompressed cache materialised between layers.
+    decompressed cache materialised between layers.  ``'auto'`` (default)
+    picks the resident region when the cache carries one, else the paged
+    path.
     """
-    if backend not in ("oracle", "xla", "auto"):
+    if backend not in ("oracle", "resident", "xla", "auto"):
         raise ValueError(f"unknown backend {backend!r}; "
-                         "choose from ('oracle', 'xla', 'auto')")
-    if backend == "oracle":
+                         "choose from ('oracle', 'resident', 'xla', 'auto')")
+    if backend == "resident" and "k_dec" not in cache:
+        raise ValueError("backend='resident' requires a cache built with "
+                         "spec.resident_decode=True")
+    if backend in ("oracle", "resident") or (backend == "auto" and "k_dec" in cache):
         K, V, valid = read_full(spec, cache, pos)
         B, S, Kv, hd = K.shape
         H = q.shape[2]

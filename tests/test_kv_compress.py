@@ -137,3 +137,117 @@ def test_compressed_cache_smaller():
     spec = kvc.KVSpec(n_kv=8, head_dim=128, max_len=32768)
     assert spec.compressed_bytes(64) < 0.85 * spec.raw_bytes(64), (
         spec.compressed_bytes(64), spec.raw_bytes(64))
+    # the opt-in resident region is honest accounting: it adds the decoded
+    # copy (>= raw size) on top of the compressed pages
+    import dataclasses
+    res = dataclasses.replace(spec, resident_decode=True)
+    assert res.compressed_bytes(64) >= spec.compressed_bytes(64) + spec.raw_bytes(64) \
+        - 2 * 64 * spec.page_tokens * spec.row_words * spec.word_bytes
+
+
+# ---------------------------------------------------------------------------
+# incremental resident decode (spec.resident_decode)
+# ---------------------------------------------------------------------------
+
+def _bit_equal(a, b, msg):
+    np.testing.assert_array_equal(np.asarray(a).view(np.uint16),
+                                  np.asarray(b).view(np.uint16), err_msg=msg)
+
+
+def test_resident_decode_bit_identical_over_random_schedule():
+    """Property test for the incremental decoded-page region: drive a
+    random admit(bulk-prefill)/append/flush schedule and assert, after
+    every burst, that ``k_dec``/``v_dec`` are bit-identical to a
+    from-scratch ``_decompress_all`` of the page slots, and that
+    ``read_full`` on the resident cache is bit-identical to the
+    non-resident cache fed the same tokens."""
+    import dataclasses
+
+    from repro.serving.engine import KVSession
+
+    fr = FRConfig(word_bits=16, page_words=128, width_set=(4, 8),
+                  bucket_caps=(32, 128), num_bases=14, outlier_cap=16)
+    spec = kvc.KVSpec(n_kv=2, head_dim=16, max_len=32, fr=fr,
+                      resident_decode=True)
+    spec0 = dataclasses.replace(spec, resident_decode=False)
+    assert spec.page_tokens == 4          # flushes mid-schedule, not per-token
+    rng = np.random.default_rng(7)
+
+    def mk(n):
+        ch = rng.normal(0, 1, (1, 1, 2, 16)) * 2
+        return jnp.asarray(
+            (ch + rng.normal(0, 0.1, (B, n, 2, 16))).astype(np.float32))
+
+    sample = mk(32)
+    w = jax.lax.bitcast_convert_type(sample.astype(jnp.bfloat16), jnp.uint16)
+    table = fit_fr_bases(w.astype(jnp.int32).reshape(-1), fr)
+
+    sess = KVSession(spec, B, table)                 # auto -> resident reads
+    plain = kvc.init_compressed(spec0, B, table)
+    _bit_equal(sess.cache["k_dec"],
+               kvc._decompress_all(spec, sess.cache["k_pages"], table),
+               "init region != from-scratch decode of zero pages")
+    import functools
+    append0 = jax.jit(functools.partial(kvc.append, spec0))
+
+    pos = 0
+    while pos < spec.max_len - 6:
+        burst = int(rng.integers(1, 6))
+        ks, vs = mk(burst), mk(burst)
+        if burst > 1 and rng.random() < 0.5:
+            sess.prefill(ks, vs)                     # admit: bulk fori_loop
+        else:
+            for t in range(burst):                   # decode-loop appends
+                sess.append(ks[:, t:t + 1], vs[:, t:t + 1])
+        for t in range(burst):
+            plain = append0(plain, ks[:, t:t + 1], vs[:, t:t + 1],
+                            jnp.int32(pos + t))
+        pos += burst
+        for side in ("k", "v"):
+            _bit_equal(sess.cache[f"{side}_dec"],
+                       kvc._decompress_all(spec, sess.cache[f"{side}_pages"],
+                                           table),
+                       f"{side}_dec diverged from from-scratch @ pos {pos}")
+        K1, V1, val1 = kvc.read_full(spec, sess.cache, jnp.int32(pos - 1))
+        K0, V0, val0 = kvc.read_full(spec0, plain, jnp.int32(pos - 1))
+        _bit_equal(K1, K0, f"read_full K @ pos {pos}")
+        _bit_equal(V1, V0, f"read_full V @ pos {pos}")
+        np.testing.assert_array_equal(np.asarray(val1), np.asarray(val0))
+
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, 4, 16)).astype(np.float32))
+    out_res = kvc.attention_decode(spec, q, sess.cache, jnp.int32(pos - 1),
+                                   backend="resident")
+    out_auto = kvc.attention_decode(spec, q, sess.cache, jnp.int32(pos - 1),
+                                    backend="auto")
+    out_orc = kvc.attention_decode(spec0, q, plain, jnp.int32(pos - 1),
+                                   backend="oracle")
+    _bit_equal(out_res, out_orc, "resident attention != oracle")
+    _bit_equal(out_auto, out_res, "auto did not pick the resident region")
+    import pytest
+    with pytest.raises(ValueError, match="resident_decode"):
+        kvc.attention_decode(spec0, q, plain, jnp.int32(pos - 1),
+                             backend="resident")
+
+
+def test_kvsession_step_matches_manual_path():
+    """KVSession.step (append + attend, one jitted dispatch each) equals
+    the manual append/attention_decode sequence bit-for-bit."""
+    from repro.serving.engine import KVSession
+
+    rng = np.random.default_rng(11)
+    n = 8
+    ks, vs = _mk_kv(rng, n), _mk_kv(rng, n)
+    table = _bases(np.concatenate([ks, vs], axis=1))
+    spec = SPEC
+    sess = KVSession(spec, B, table, backend="oracle")
+    cache = kvc.init_compressed(spec, B, table)
+    H = 8
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, H, HD)).astype(np.float32))
+    for t in range(n):
+        k, v = jnp.asarray(ks[:, t:t + 1]), jnp.asarray(vs[:, t:t + 1])
+        got = sess.step(q, k, v)
+        cache = kvc.append(spec, cache, k, v, jnp.int32(t))
+        want = kvc.attention_decode(spec, q, cache, jnp.int32(t),
+                                    backend="oracle")
+        _bit_equal(got, want, f"session step @ {t}")
+    assert sess.pos == n

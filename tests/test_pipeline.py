@@ -1,8 +1,9 @@
-"""Sharded encode pipeline (repro.kernels.pipeline): blob parity of the
-auto / explicit-shard / stream / traced paths against the plain XLA chain,
-the multi-device byte-identity subprocess test (forced host devices), the
-FRCodec stream/shard knobs, and the throughput harness's loud-failure +
-truncation-marking contract."""
+"""Sharded encode/decode pipeline (repro.kernels.pipeline): blob and word
+parity of the auto / explicit-shard / stream / traced paths against the
+plain XLA chain in both directions, the multi-device byte-identity
+subprocess test (forced host devices), the FRCodec stream/shard knobs,
+and the throughput harness's loud-failure + truncation-marking
+contract."""
 import json
 import os
 import subprocess
@@ -112,6 +113,90 @@ def test_frcodec_stream_and_shard_knobs(fitted):
                                           np.asarray(want[k]), err_msg=k)
 
 
+# ---------------------------------------------------------------------------
+# decode front-end: same sharding policy, blobs in -> word pages out
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def decode_ref(fitted):
+    x, table, blob = fitted
+    return np.asarray(xla.decode_pages(blob, table, CFG))
+
+
+def test_decode_auto_and_explicit_match_xla(fitted, decode_ref):
+    x, table, blob = fitted
+    np.testing.assert_array_equal(
+        np.asarray(pipeline.decode_pages(blob, table, CFG)), decode_ref)
+    # 37 rows across 4 shards: padding rows decode as zero-blob pages and
+    # are stripped on reassembly
+    np.testing.assert_array_equal(
+        np.asarray(pipeline.decode_pages(blob, table, CFG, devices=4)),
+        decode_ref)
+    np.testing.assert_array_equal(
+        np.asarray(pipeline.decode_pages_sharded(blob, table, CFG, devices=3)),
+        decode_ref)
+    # unsigned output: the fused in-chain cast must equal casting the
+    # signed words mod 2**word_bits, on both the plain and split paths
+    udt = np.uint16 if CFG.word_bits == 16 else np.uint32
+    for kw in ({}, {"devices": 4}):
+        uw = np.asarray(pipeline.decode_pages(
+            blob, table, CFG, unsigned=True, **kw))
+        assert uw.dtype == udt
+        np.testing.assert_array_equal(uw, decode_ref.astype(udt))
+
+
+def test_decode_stream_double_buffered(fitted, decode_ref):
+    x, table, blob = fitted
+    bounds = np.array_split(np.arange(37), 5)
+    parts = [{k: v[idx[0]:idx[-1] + 1] for k, v in blob.items()}
+             for idx in bounds]
+    words = list(pipeline.decode_stream(parts, table, CFG))
+    assert len(words) == 5
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(words)),
+                                  decode_ref)
+    assert list(pipeline.decode_stream([], table, CFG)) == []
+
+
+def test_decode_traced_falls_through(fitted, decode_ref):
+    # the serving KV cache decompresses inside jit — the front-end must be
+    # exactly the XLA chain there
+    x, table, blob = fitted
+
+    @jax.jit
+    def dec(b):
+        return pipeline.decode_pages(b, table, CFG)
+
+    np.testing.assert_array_equal(np.asarray(dec(blob)), decode_ref)
+
+
+def test_decode_leading_axes(fitted, decode_ref):
+    x, table, blob = fitted
+    blob36 = {k: v[:36] for k, v in blob.items()}
+    blob3 = {k: v.reshape((4, 9) + v.shape[1:]) for k, v in blob36.items()}
+    words = pipeline.decode_pages(blob3, table, CFG, devices=2)
+    assert words.shape == (4, 9, CFG.page_words)
+    np.testing.assert_array_equal(
+        np.asarray(words).reshape(36, CFG.page_words), decode_ref[:36])
+
+
+def test_frcodec_decode_stream_and_shard_knobs(fitted):
+    from repro.eval.codecs import FRCodec
+
+    data = np.asarray(_pages(32)).astype(np.uint16).view(np.uint8).tobytes()
+    data = np.frombuffer(data, np.uint8)
+    base = FRCodec(word_bits=16, backend="xla", cfg=CFG)
+    model = base.fit(data)
+    blob = base.encode(data, model)
+    want = base.decode(blob)
+    for codec in (FRCodec(word_bits=16, backend="xla", cfg=CFG, devices=3),
+                  FRCodec(word_bits=16, backend="xla", cfg=CFG,
+                          stream_batches=4)):
+        np.testing.assert_array_equal(codec.decode(blob), want)
+    # and the xla path matches the reference backend bit-for-bit
+    np.testing.assert_array_equal(
+        FRCodec(word_bits=16, backend="ref", cfg=CFG).decode(blob), want)
+
+
 _SUBPROC = r"""
 import hashlib, json, sys
 import numpy as np, jax, jax.numpy as jnp
@@ -137,10 +222,19 @@ def digest(blob):
 
 single = xla.encode_pages(jax.device_put(pages, jax.devices()[0]), table, cfg)
 sharded = pipeline.encode_pages_sharded(pages, table, cfg)
+
+def wdigest(words):
+    return hashlib.sha256(
+        np.ascontiguousarray(np.asarray(words)).tobytes()).hexdigest()
+
 print(json.dumps({
     "devices": pipeline.device_count(),
     "single": digest(single),
     "sharded": digest(sharded),
+    "dec_single": wdigest(xla.decode_pages(single, table, cfg)),
+    "dec_sharded": wdigest(pipeline.decode_pages_sharded(sharded, table, cfg)),
+    "dec_spmd": wdigest(pipeline.decode_pages_sharded(
+        sharded, table, cfg, mode="spmd")),
 }))
 """
 
@@ -148,7 +242,9 @@ print(json.dumps({
 def test_forced_multi_device_byte_identity():
     """Under XLA_FLAGS=--xla_force_host_platform_device_count=4 the
     sharded pipeline's blobs are byte-identical to the single-device path
-    on a bf16 ML stream (sha256 over every blob field)."""
+    on a bf16 ML stream (sha256 over every blob field), and the sharded
+    decode (split AND spmd) of those blobs is byte-identical to the
+    single-device decode."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=4").strip()
@@ -161,6 +257,8 @@ def test_forced_multi_device_byte_identity():
     got = json.loads(out.stdout.strip().splitlines()[-1])
     assert got["devices"] == 4
     assert got["single"] == got["sharded"]
+    assert got["dec_single"] == got["dec_sharded"]
+    assert got["dec_single"] == got["dec_spmd"]
 
 
 # ---------------------------------------------------------------------------

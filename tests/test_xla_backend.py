@@ -186,6 +186,38 @@ def test_table_prep_never_serves_stale_constants_after_gc():
     assert info["misses"] == 12 and info["hits"] == 0, info
 
 
+def test_table_prep_cache_bounded_lru():
+    """Regression: the digest-keyed table memo is LRU-bounded — preparing
+    more distinct tables than the cap keeps the cache at the cap, and an
+    evicted table rebuilds correctly on re-prepare (a fresh miss with the
+    right constants, never stale ones), while recent entries still hit."""
+    cfg = FRConfig(word_bits=16, page_words=128, num_bases=4,
+                   width_set=(4, 8), bucket_caps=(32, 96), outlier_cap=8)
+    xla.table_cache_clear()
+    n = xla._PREP_CAP + 8
+    tables = []
+    for i in range(n):
+        bases = np.asarray([100, 900, 5000, 20000], np.int32) + 3 * i
+        table = BaseTable(jnp.asarray(bases),
+                          jnp.asarray([4, 8, 4, 8], jnp.int32))
+        tables.append((table, bases))
+        xla.prepare_table(table, cfg)
+        assert xla.table_cache_info()["size"] <= xla._PREP_CAP
+    info = xla.table_cache_info()
+    assert info["size"] == xla._PREP_CAP and info["misses"] == n, info
+    # oldest entry was evicted: re-preparing is a miss, not stale constants
+    t0, b0 = tables[0]
+    prep0 = xla.prepare_table(t0, cfg)
+    np.testing.assert_array_equal(np.asarray(prep0.bases), b0)
+    assert xla.table_cache_info()["misses"] == n + 1
+    # most recent entry is still resident
+    tn, bn = tables[-1]
+    hits = xla.table_cache_info()["hits"]
+    np.testing.assert_array_equal(
+        np.asarray(xla.prepare_table(tn, cfg).bases), bn)
+    assert xla.table_cache_info()["hits"] == hits + 1
+
+
 def test_auto_backend_resolves_compiled():
     """'auto' never resolves to interpret mode: off-TPU it must be the
     compiled xla path (and the default everywhere in ops)."""
