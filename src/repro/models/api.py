@@ -149,6 +149,31 @@ class Model:
     def init_cache(self, batch: int, max_len: int) -> Params:
         return stack_cache_init(self.cfg, batch, max_len, jnp.dtype(self.cfg.dtype))
 
+    @property
+    def n_kv_layers(self) -> int:
+        """Attention-bearing layers — the ones owning a (B, S, Kv, hd) KV
+        cache.  The serving scheduler multiplies per-layer KV byte costs
+        by this to account a whole sequence's cache footprint."""
+        attn = ("attn", "local", "shared_attn")
+        cfg = self.cfg
+        per_period = sum(1 for s in cfg.pattern if s.mixer in attn)
+        tail = sum(1 for s in cfg.tail_layers if s.mixer in attn)
+        return cfg.n_periods * per_period + tail
+
+    def kv_cache_spec(self, max_len: int, *, fr=None, resident_decode: bool = False):
+        """Per-layer compressed-KV geometry (:class:`repro.serving.kv_cache.KVSpec`)
+        matching this model's attention shape — the unit of the serving
+        scheduler's byte-budget accounting (``spec.compressed_bytes(1)`` /
+        ``spec.raw_bytes(1)`` per resident sequence per layer)."""
+        # deferred import: serving.engine imports models.api at module
+        # scope, so importing serving.kv_cache lazily keeps layering acyclic
+        from repro.serving.kv_cache import KV_FR, KVSpec
+
+        cfg = self.cfg
+        return KVSpec(n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                      max_len=max_len, fr=fr if fr is not None else KV_FR,
+                      resident_decode=resident_decode)
+
     def prefill(self, p: Params, batch: dict, cache: Params):
         h, new_cache, _, _ = self.hidden(p, batch, cache=cache, mode="prefill")
         logits = self._head(p, h[:, -1:])

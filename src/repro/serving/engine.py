@@ -34,6 +34,16 @@ class Request:
     done: bool = False
 
 
+@functools.lru_cache(maxsize=8)
+def _model_jits(model: Model):
+    """Per-model jitted decode/prefill, shared by every Engine over that
+    model: a fresh Engine must not retrace or recompile anything — serving
+    respawns engines per configuration sweep cell, and the scheduler
+    property suite builds hundreds.  Params are call arguments, so the
+    cache pins only the (frozen, hashable) model definition."""
+    return jax.jit(model.decode_step), jax.jit(model.prefill_into)
+
+
 class Engine:
     def __init__(self, model: Model, params, *, batch_slots: int = 4, max_len: int = 256):
         self.model, self.params = model, params
@@ -41,41 +51,65 @@ class Engine:
         self.cache = model.init_cache(batch_slots, max_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)  # per-slot next write pos
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(model.prefill_into)
+        self._decode, self._prefill = _model_jits(model)
 
     def admit(self, reqs: list[Request]) -> int:
-        """Prefill a batch of requests into free slots (same length prompts
-        share one prefill; production would bucket by length).
+        """Prefill a batch of requests into free slots (same-length prompts
+        share one prefill; mixed lengths run one masked prefill per
+        distinct length).
 
-        Admission works mid-generation: the prefill computes over every
+        Admission works mid-generation: each prefill computes over every
         batch row, but only the admitted rows' cache lines are merged in,
         and per-slot positions mean in-flight rows keep decoding at their
         own offsets, bit-stable (regression-tested in test_substrate).
+
+        Grouping by prompt length is a correctness requirement, not just a
+        bucketing nicety: padding a shorter prompt into a longer batch
+        shifts its RoPE positions and parks pad-token KV under the decode
+        positions it is about to use (and desyncs sliding-window ring
+        caches), so its continuation diverges from a solo admit.  One
+        prefill per distinct length keeps every admit bit-identical to
+        admitting that request alone (mixed-length parity test in
+        test_substrate).
         """
         for i in range(self.B):  # done slots are released wholesale
             if self.slot_req[i] is not None and self.slot_req[i].done:
-                self.slot_req[i] = None
+                self.release(i)
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         take = reqs[: len(free)]
         if not take:
             return 0
-        S = max(len(r.prompt) for r in take)
-        toks = np.zeros((self.B, S), np.int32)
-        mask = np.zeros(self.B, bool)
-        for slot, r in zip(free, take):
-            toks[slot, S - len(r.prompt):] = r.prompt
-            self.slot_req[slot] = r
-            mask[slot] = True
-        self.cache, logits = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, self.cache,
-            jnp.asarray(mask),
-        )
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for slot, r in zip(free, take):
-            self.slot_pos[slot] = S
-            r.out.append(int(nxt[slot]))
+        by_len: dict[int, list[Request]] = {}
+        for r in take:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        slot_it = iter(free)
+        for S, group in sorted(by_len.items()):
+            slots = [next(slot_it) for _ in group]
+            toks = np.zeros((self.B, S), np.int32)
+            mask = np.zeros(self.B, bool)
+            for slot, r in zip(slots, group):
+                toks[slot] = r.prompt
+                self.slot_req[slot] = r
+                mask[slot] = True
+            self.cache, logits = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.cache,
+                jnp.asarray(mask),
+            )
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for slot, r in zip(slots, group):
+                self.slot_pos[slot] = S
+                r.out.append(int(nxt[slot]))
         return len(take)
+
+    def release(self, slot: int) -> Request | None:
+        """Free one slot (the scheduler's eviction/parking hook).  The KV
+        rows are left in place: they are invisible to decode (masked by the
+        per-slot position) and fully overwritten by the next prefill into
+        the slot."""
+        r = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        return r
 
     def tick(self) -> bool:
         """Decode one token for every active slot. Returns any-active."""
@@ -84,10 +118,16 @@ class Engine:
         if not active:
             return False
         for i in active:
-            # per-slot cache ceiling: truncate so the slot frees up —
-            # otherwise admit() would never see it released
-            if self.slot_pos[i] >= self.max_len - 1:
-                self.slot_req[i].done = True
+            r = self.slot_req[i]
+            # per-slot cache ceiling: decoding at position p writes KV row
+            # p, so the last decodable position is max_len - 1 — a slot is
+            # done only once slot_pos passes it (marking done at
+            # max_len - 1 would silently drop the final token; regression-
+            # tested against a max_new-bounded run in test_substrate).
+            # Truncating frees the slot, otherwise admit() would never see
+            # it released.
+            if self.slot_pos[i] >= self.max_len or len(r.out) >= r.max_new:
+                r.done = True
         active = [i for i in active if not self.slot_req[i].done]
         if not active:
             return False
@@ -104,7 +144,7 @@ class Engine:
             r = self.slot_req[i]
             self.slot_pos[i] += 1
             r.out.append(int(nxt[i]))
-            if len(r.out) >= r.max_new:
+            if len(r.out) >= r.max_new or self.slot_pos[i] >= self.max_len:
                 r.done = True
         return any(r is not None and not r.done for r in self.slot_req)
 

@@ -111,6 +111,27 @@ class KVSpec:
     def raw_bytes(self, batch: int) -> int:
         return 2 * batch * self.max_len * self.row_words * self.word_bytes  # k and v
 
+    def compressed_bytes_upto(self, batch: int, n_tokens: int) -> int:
+        """Bytes needed to hold just the first ``n_tokens`` of a sequence:
+        the page slots those tokens flush into plus the raw tail ring
+        (always allocated — unflushed tokens live there).  This is the
+        irreducible footprint the serving scheduler charges a prompt when
+        deciding whether a request can *ever* fit its byte budget; the
+        full static-slot cost is :meth:`compressed_bytes`."""
+        pages = min(self.n_pages, max(0, n_tokens) // self.page_tokens)
+        per_page = self.fr.compressed_bytes_per_page()
+        b = 2 * batch * pages * per_page
+        b += 2 * batch * self.page_tokens * self.row_words * self.word_bytes
+        if self.resident_decode:
+            b += 2 * batch * pages * self.page_tokens \
+                * self.row_words * self.word_bytes
+        return b
+
+    def raw_bytes_upto(self, batch: int, n_tokens: int) -> int:
+        """Raw-cache analogue of :meth:`compressed_bytes_upto`."""
+        n = min(self.max_len, max(0, n_tokens))
+        return 2 * batch * n * self.row_words * self.word_bytes
+
 
 def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> dict:
     fr = spec.fr

@@ -188,3 +188,74 @@ def test_serving_max_len_truncates_and_frees_slots(serving_setup):
     assert r1.done and 0 < len(r1.out) < 100  # truncated at the ceiling
     r2 = Request(1, rng.integers(0, cfg.vocab_size, 4).astype(np.int32), max_new=2)
     assert eng.admit([r2]) == 1               # slot freed, engine still live
+
+
+def test_serving_ceiling_emits_final_token(serving_setup):
+    """Decoding at position p writes KV row p, so the last decodable
+    position is max_len - 1.  The ceiling check used to mark slots done
+    *at* max_len - 1, silently dropping the final token: a max_len-bounded
+    run must match a max_new-bounded run of the same effective length."""
+    from repro.serving.engine import Engine, Request
+
+    cfg, model, params = serving_setup
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+
+    eng = Engine(model, params, batch_slots=1, max_len=12)
+    bounded = Request(0, p.copy(), max_new=100)
+    assert eng.admit([bounded]) == 1
+    while eng.tick():
+        pass
+    # prefill token + decodes at positions 4..11 inclusive
+    assert len(bounded.out) == 1 + (12 - len(p))
+
+    eng_ref = Engine(model, params, batch_slots=1, max_len=64)
+    ref = Request(0, p.copy(), max_new=len(bounded.out))
+    assert eng_ref.admit([ref]) == 1
+    while eng_ref.tick():
+        pass
+    assert bounded.out == ref.out
+
+
+def test_serving_admit_mixed_length_batch_matches_sequential(serving_setup):
+    """Admitting different-length prompts in one batch used to left-pad the
+    shorter prompt to the batch max: its RoPE positions shifted and its
+    first decode steps attended over pad-token KV rows.  Each request in a
+    mixed-length admit must now be bit-identical to admitting it alone."""
+    from repro.serving.engine import Engine, Request
+
+    cfg, model, params = serving_setup
+    rng = np.random.default_rng(4)
+    p1 = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+
+    eng = Engine(model, params, batch_slots=2, max_len=64)
+    r1 = Request(0, p1.copy(), max_new=6)
+    r2 = Request(1, p2.copy(), max_new=6)
+    assert eng.admit([r1, r2]) == 2           # one batch, two prompt lengths
+    while eng.tick():
+        pass
+
+    for prompt, mixed in ((p1, r1), (p2, r2)):
+        solo_eng = Engine(model, params, batch_slots=2, max_len=64)
+        solo = Request(0, prompt.copy(), max_new=6)
+        assert solo_eng.admit([solo]) == 1
+        while solo_eng.tick():
+            pass
+        assert mixed.out == solo.out
+
+
+def test_serving_max_new_one_emits_exactly_one_token(serving_setup):
+    """max_new=1 is fully served by the prefill's argmax: the first tick
+    must mark the slot done without decoding (and overrunning by) a
+    second token."""
+    from repro.serving.engine import Engine, Request
+
+    cfg, model, params = serving_setup
+    rng = np.random.default_rng(5)
+    eng = Engine(model, params, batch_slots=1, max_len=32)
+    r = Request(0, rng.integers(0, cfg.vocab_size, 6).astype(np.int32), max_new=1)
+    assert eng.admit([r]) == 1
+    assert len(r.out) == 1
+    assert eng.tick() is False
+    assert r.done and len(r.out) == 1
