@@ -1,10 +1,14 @@
 """Serve a small model through the continuous-batching scheduler and
 report what GBDI-FR KV compression buys under a byte budget.
 
-Ten requests contend for a budget worth six raw-cache sequences: under
-compressed accounting the same budget keeps seven resident at once, and
-a late high-priority request shows eviction/parking — the displaced
-sequence resumes transparently and still finishes.
+Ten full-length requests contend for a budget worth six raw-cache
+sequences: under compressed accounting the same budget keeps seven
+resident at once, and a late high-priority request shows
+eviction/parking — the displaced sequence resumes transparently and
+still finishes.  Reservations are token-level (each request is charged
+its own final context, not the ``max_len`` slot), so the contention
+here comes from the requests genuinely filling the cache; a short
+request reserves a fraction of that (printed at the end).
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -28,15 +32,16 @@ def main():
     budget = 6 * raw_seq                     # room for 6 raw sequences
     rng = np.random.default_rng(0)
 
+    max_new = max_len - 12                   # prompt 12 + max_new fills the cache
     for accounting in ("raw", "compressed"):
         eng = Engine(model, params, batch_slots=8, max_len=max_len)
         sched = Scheduler(eng, byte_budget=budget, accounting=accounting)
         reqs = [sched.submit(rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
-                             max_new=8) for _ in range(10)]
+                             max_new=max_new) for _ in range(10)]
         for _ in range(3):                   # let decode get going...
             sched.step()
         vip = sched.submit(rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
-                           max_new=8, priority=1)
+                           max_new=max_new, priority=1)
         sched.run()                          # ...then drain everything
         c = sched.counters
         print(f"{accounting:>10}: budget={budget} B "
@@ -44,7 +49,15 @@ def main():
               f"{c['peak_resident']}, evictions {c['evicted']}, "
               f"resumes {c['resumed']}, {c['tokens']} tokens, "
               f"vip waited {vip.admit_tick - vip.submit_tick} ticks")
-        assert all(len(r.out) == 8 for r in reqs + [vip])
+        assert all(len(r.out) == max_new for r in reqs + [vip])
+        assert vip.evictions == 0            # priority 1 is never the victim
+
+    # token-level reservations: a short request is charged its own final
+    # context, not the max_len slot it can never fill
+    short = sched.prompt_bytes(12 + 8)
+    print(f"\nshort request (prompt 12, max_new 8) reserves {short} B "
+          f"vs {sched.bytes_per_seq} B for a full-length slot "
+          f"({sched.bytes_per_seq / short:.1f}x more of them fit one budget)")
 
     # what the compressed cache buys at llama3-405b decode scale
     spec = KVSpec(n_kv=8, head_dim=128, max_len=32768)

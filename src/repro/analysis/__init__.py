@@ -7,18 +7,27 @@ This package is the before-review gate: a small AST-level pass that
 knows the codebase's two recurring hazard families and catches them at
 lint time.
 
-Two checker layers (see ``docs/ANALYSIS.md`` for the full catalog):
+Three checker layers (see ``docs/ANALYSIS.md`` for the full catalog):
 
 * **JAX/Pallas hot-path hazards** — host<->device syncs inside jitted
-  code, tracer-unsafe Python control flow, jit call sites missing
-  ``static_argnames`` for config-like parameters, unseeded legacy RNG
-  use outside tests, and closure captures of mutated module globals
-  that silently trigger recompilation.
+  code (device context propagated through the module-local call graph,
+  :mod:`repro.analysis.callgraph`), tracer-unsafe Python control flow,
+  jit call sites missing ``static_argnames`` for config-like
+  parameters, unseeded legacy RNG use outside tests, and closure
+  captures of mutated module globals that silently trigger
+  recompilation.
 * **Format invariants** — magic bit-width/cap integer literals in
   ``kernels/``/``serving/``/``distributed/`` that must reference the
-  named constants in :mod:`repro.core.format`, and a backend-parity
+  named constants in :mod:`repro.core.format`, a backend-parity
   surface check asserting every encode/decode/attention op has oracle,
-  XLA and Pallas twins.
+  XLA and Pallas twins, and a schema-drift diff of ``docs/FORMAT.md``
+  §6 against ``format_doc.serialize_page`` and the encoder blob fields.
+* **Dataflow hazards** — reads of names already passed at
+  ``donate_argnums`` positions (:mod:`repro.analysis.dataflow_checkers`),
+  module-level memo caches with no eviction bound, and a static Pallas
+  VMEM cost model (:mod:`repro.analysis.pallas_cost`) holding every
+  kernel's BlockSpec tiles + transient estimate under the shared
+  ``VMEM_BUDGET_BYTES`` (reported via ``--vmem-report``).
 
 Entry points: ``python -m repro.analysis <paths>`` (text and ``--json``
 reports, exit-nonzero on unbaselined findings) and :func:`run_analysis`

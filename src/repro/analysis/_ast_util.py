@@ -82,6 +82,14 @@ class JitSite:
     static_argnums: set[int]
     has_static: bool               # any static_arg* spelled at the site
     has_donate: bool               # donate_argnums/donate_argnames spelled
+    donate_argnums: set[int] = dataclasses.field(default_factory=set)
+    donate_argnames: set[str] = dataclasses.field(default_factory=set)
+
+    def donated_params(self, fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+        """Parameter names of ``fn`` donated at this site."""
+        pos = positional_param_names(fn)
+        out = {pos[i] for i in self.donate_argnums if i < len(pos)}
+        return out | (self.donate_argnames & set(param_names(fn)))
 
 
 def parse_jit_decorator(dec: ast.expr) -> JitSite | None:
@@ -100,6 +108,8 @@ def parse_jit_decorator(dec: ast.expr) -> JitSite | None:
         return None
     names: set[str] = set()
     nums: set[int] = set()
+    dnums: set[int] = set()
+    dnames: set[str] = set()
     has_static = has_donate = False
     for kw in call_kwargs:
         if kw.arg == "static_argnames":
@@ -108,9 +118,13 @@ def parse_jit_decorator(dec: ast.expr) -> JitSite | None:
         elif kw.arg == "static_argnums":
             nums |= _int_elements(kw.value)
             has_static = True
-        elif kw.arg in ("donate_argnums", "donate_argnames"):
+        elif kw.arg == "donate_argnums":
+            dnums |= _int_elements(kw.value)
             has_donate = True
-    return JitSite(dec, names, nums, has_static, has_donate)
+        elif kw.arg == "donate_argnames":
+            dnames |= _str_elements(kw.value)
+            has_donate = True
+    return JitSite(dec, names, nums, has_static, has_donate, dnums, dnames)
 
 
 def annotation_is_static(ann: ast.expr | None) -> bool:

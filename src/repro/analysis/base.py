@@ -53,7 +53,12 @@ def register(
 
 def _ensure_loaded() -> None:
     # importing the checker modules populates the registry
-    from repro.analysis import format_checkers, jax_checkers  # noqa: F401
+    from repro.analysis import (  # noqa: F401
+        dataflow_checkers,
+        format_checkers,
+        jax_checkers,
+        pallas_cost,
+    )
 
 
 def all_checks() -> list[Checker]:

@@ -3,10 +3,13 @@
 The baseline is a checked-in JSON file whose entries each require a
 human-written ``justification`` — an empty or missing justification is a
 hard :class:`BaselineError`, not a finding.  Matching is on
-``(check, path, anchor)`` where *anchor* is the stripped source line, so
-entries survive unrelated edits that shift line numbers, but go stale
-the moment the flagged line itself changes — stale entries are reported
-so the file can't silently rot.
+``(check, path, anchor, occurrence)`` where *anchor* is the stripped
+source line and *occurrence* its index among identical anchors in the
+file, so entries survive unrelated edits that shift line numbers, but go
+stale the moment the flagged line itself changes — stale entries are
+reported so the file can't silently rot.  ``occurrence`` defaults to 0
+when absent from the JSON (pre-occurrence baselines keep working); it
+matters only when one file repeats the flagged line verbatim.
 """
 from __future__ import annotations
 
@@ -28,10 +31,11 @@ class BaselineEntry:
     path: str
     anchor: str
     justification: str
+    occurrence: int = 0
 
     @property
-    def key(self) -> tuple[str, str, str]:
-        return (self.check, self.path, self.anchor)
+    def key(self) -> tuple[str, str, str, int]:
+        return (self.check, self.path, self.anchor, self.occurrence)
 
     def to_json(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
@@ -69,9 +73,15 @@ class Baseline:
                 raise BaselineError(
                     f"baseline {p}: entry {i} ({raw['check']} @ {raw['path']}) "
                     "has an empty justification — every suppression must say why")
+            occ = raw.get("occurrence", 0)
+            if not isinstance(occ, int) or occ < 0:
+                raise BaselineError(
+                    f"baseline {p}: entry {i} ({raw['check']} @ {raw['path']}) "
+                    "has a non-integer or negative occurrence index")
             entries.append(BaselineEntry(
                 check=str(raw["check"]), path=str(raw["path"]),
-                anchor=str(raw["anchor"]), justification=just.strip()))
+                anchor=str(raw["anchor"]), justification=just.strip(),
+                occurrence=occ))
         dupes = _duplicates(e.key for e in entries)
         if dupes:
             raise BaselineError(f"baseline {p}: duplicate entries {dupes}")
@@ -89,15 +99,18 @@ class Baseline:
         payload = {
             "comment": "Reviewed suppressions for python -m repro.analysis. "
                        "Each entry must carry a justification; matching is on "
-                       "(check, path, stripped source line).",
+                       "(check, path, stripped source line, occurrence index "
+                       "among identical lines).",
             "entries": [e.to_json() for e in self.entries],
         }
         Path(path).write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
 
 
-def _duplicates(keys: Iterable[tuple[str, str, str]]) -> list[tuple[str, str, str]]:
-    seen: set[tuple[str, str, str]] = set()
-    out: list[tuple[str, str, str]] = []
+def _duplicates(
+    keys: Iterable[tuple[str, str, str, int]],
+) -> list[tuple[str, str, str, int]]:
+    seen: set[tuple[str, str, str, int]] = set()
+    out: list[tuple[str, str, str, int]] = []
     for k in keys:
         if k in seen:
             out.append(k)

@@ -44,6 +44,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="file-scoped checkers only (the pre-commit subset)")
     p.add_argument("--list-checks", action="store_true",
                    help="print the checker catalog and exit")
+    p.add_argument("--vmem-report", dest="vmem_report", metavar="FILE",
+                   default=None,
+                   help="also write the per-kernel Pallas VMEM bytes report "
+                        "as JSON ('-' for stdout); see analysis/pallas_cost.py")
     return p
 
 
@@ -86,6 +90,19 @@ def main(argv: Sequence[str] | None = None) -> int:
                 return 2
 
     report = run_analysis(project, checks=checkers, baseline=baseline)
+
+    if args.vmem_report:
+        from repro.analysis.pallas_cost import cost_report
+
+        costs = cost_report(project)
+        payload = json.dumps({
+            "available": costs is not None,
+            "kernels": [c.to_json() for c in costs or []],
+        }, indent=2) + "\n"
+        if args.vmem_report == "-":
+            sys.stdout.write(payload)
+        else:
+            Path(args.vmem_report).write_text(payload, encoding="utf-8")
 
     if args.json_out:
         payload = json.dumps(report.to_json(), indent=2) + "\n"

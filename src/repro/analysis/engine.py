@@ -69,6 +69,16 @@ def run_analysis(
     for checker in checkers:
         findings.extend(checker.run(project))
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.check))
+    # disambiguate duplicate anchors: the i-th finding (in line order)
+    # with the same (check, path, stripped line) gets occurrence=i, so a
+    # baseline entry suppresses exactly one copy of a repeated line
+    counts: dict[tuple[str, str, str], int] = {}
+    for i, f in enumerate(findings):
+        ident = (f.check, f.path, f.anchor)
+        occ = counts.get(ident, 0)
+        counts[ident] = occ + 1
+        if occ != f.occurrence:
+            findings[i] = dataclasses.replace(f, occurrence=occ)
     new: list[Finding] = []
     suppressed: list[tuple[Finding, BaselineEntry]] = []
     if baseline is None:

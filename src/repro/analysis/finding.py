@@ -10,9 +10,13 @@ class Finding:
     """One diagnostic emitted by a checker.
 
     ``anchor`` is the stripped source line the finding points at.  The
-    baseline matches on ``(check, path, anchor)`` rather than the line
-    *number*, so unrelated edits above a suppressed line do not
-    invalidate its baseline entry.
+    baseline matches on ``(check, path, anchor, occurrence)`` rather
+    than the line *number*, so unrelated edits above a suppressed line
+    do not invalidate its baseline entry.  ``occurrence`` disambiguates
+    duplicate stripped lines in one file (0 = first match in line
+    order): without it, one baseline entry would silently suppress
+    *every* copy of a repeated line.  :func:`repro.analysis.engine.
+    run_analysis` assigns it after sorting.
     """
 
     check: str        # checker id, e.g. "jit-host-sync"
@@ -21,11 +25,12 @@ class Finding:
     col: int          # 0-indexed
     message: str
     anchor: str       # stripped source text of the flagged line
+    occurrence: int = 0   # index among same-(check, path, anchor) findings
 
     @property
-    def key(self) -> tuple[str, str, str]:
+    def key(self) -> tuple[str, str, str, int]:
         """The baseline-matching identity of this finding."""
-        return (self.check, self.path, self.anchor)
+        return (self.check, self.path, self.anchor, self.occurrence)
 
     def to_json(self) -> dict[str, Any]:
         return dataclasses.asdict(self)

@@ -10,6 +10,7 @@ and assert the three-backend surface stays complete.
 from __future__ import annotations
 
 import ast
+import re
 from typing import Iterator
 
 from repro.analysis import _ast_util as U
@@ -96,6 +97,8 @@ _BACKENDS = ("oracle", "xla", "pallas")
 def _op_stem(name: str) -> str | None:
     """Canonical op name for a public backend function, or None."""
     low = name.lower()
+    if "vmem" in low or low.endswith("_bytes"):
+        return None                            # tile-sizing helpers, not ops
     if "attention" in low or "attn" in low:
         return "paged_attention"
     if "probe" in low:
@@ -149,3 +152,216 @@ def check_backend_parity(project: Project) -> Iterator[Finding]:
             f"{', '.join(missing)} twin(s); the three-backend bit-parity "
             "contract (docs/FORMAT.md) requires all of oracle/xla/pallas",
             src.anchor(fn.lineno))
+
+
+# --------------------------------------------------------------------------
+# format-schema-drift
+# --------------------------------------------------------------------------
+
+_FORMAT_DOC = "docs/FORMAT.md"
+_SERIALIZER_MOD = "src/repro/core/format_doc.py"
+_ENCODER_MOD = "src/repro/kernels/gbdi_encode.py"
+
+#: dtype tokens -> byte width ("word" = word_bits/8, config-dependent)
+_DTYPE_BYTES = {"uint8": 1, "uint16": 2, "uint32": 4, "int32": 4,
+                "<u1": 1, "<u2": 2, "<u4": 4, "<i4": 4}
+
+_LAYOUT_LINE = re.compile(r"^(\w+)(?:\s+\w+)?\s+:\s+(.*)$")
+
+
+def _doc_section6(text: str) -> tuple[int, list[str]] | None:
+    """(1-based start line, lines) of FORMAT.md section 6, or None."""
+    lines = text.splitlines()
+    start = end = None
+    for i, line in enumerate(lines):
+        if line.startswith("## 6."):
+            start = i
+        elif start is not None and line.startswith("## ") and i > start:
+            end = i
+            break
+    if start is None:
+        return None
+    return start + 1, lines[start:end or len(lines)]
+
+
+def _doc_table_fields(sec: list[str], base: int) -> list[tuple[str, int]]:
+    """Backticked field names from the section-6 table -> (name, lineno)."""
+    out: list[tuple[str, int]] = []
+    for off, line in enumerate(sec):
+        s = line.strip()
+        if not (s.startswith("|") and "`" in s):
+            continue
+        first_col = s.split("|")[1]
+        for name in re.findall(r"`(\w+)`", first_col):
+            out.append((name, base + off))
+    return out
+
+
+def _doc_layout(sec: list[str], base: int) -> list[tuple[str, object, int]]:
+    """(field, byte width | 'word', lineno) rows of the serialized-layout
+    fenced block, continuation lines folded into their field row."""
+    rows: list[tuple[str, object, int]] = []
+    in_block = False
+    for off, line in enumerate(sec):
+        if line.strip().startswith("```"):
+            if in_block:
+                break
+            in_block = True
+            continue
+        if not in_block:
+            continue
+        m = _LAYOUT_LINE.match(line)
+        if m is None:
+            continue                           # continuation line
+        name, rest = m.group(1), m.group(2)
+        width: object = next(
+            (w for tok, w in _DTYPE_BYTES.items() if tok in rest), None)
+        if "word_bits/8" in rest or "word-sized" in rest:
+            width = "word"
+        rows.append((name, width, base + off))
+    return rows
+
+
+def _blob_key_of(node: ast.expr, locals_map: dict[str, str]) -> str | None:
+    """The blob dict key a serializer expression reads, through locals."""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Subscript)
+                and isinstance(sub.value, ast.Name) and sub.value.id == "blob"
+                and isinstance(sub.slice, ast.Constant)):
+            return str(sub.slice.value)
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in locals_map:
+            return locals_map[sub.id]
+    return None
+
+
+def _astype_width(node: ast.expr) -> object:
+    """Byte width from the ``.astype(...)`` in a serializer expression."""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr == "astype" and sub.args):
+            arg = sub.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                return _DTYPE_BYTES.get(arg.value)
+            if isinstance(arg, ast.Name) and arg.id == "val_dt":
+                return "word"
+    return None
+
+
+def _serializer_layout(src: SourceFile) -> list[tuple[str, object]] | None:
+    """(blob key, byte width | 'word') sequence of ``serialize_page``."""
+    fn = next((n for n in src.tree.body if isinstance(n, ast.FunctionDef)
+               and n.name == "serialize_page"), None)
+    if fn is None:
+        return None
+    locals_map: dict[str, str] = {}
+    header_key: str | None = None
+    join_list: ast.List | None = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            tgt = node.targets[0].id
+            key = _blob_key_of(node.value, locals_map)
+            if key is not None:
+                locals_map[tgt] = key
+            for sub in ast.walk(node.value):
+                if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name)
+                        and sub.func.id == "bytes"):
+                    header_key = _blob_key_of(node.value, locals_map) or "profile"
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "join" and node.args \
+                and isinstance(node.args[0], (ast.List, ast.Tuple)):
+            join_list = node.args[0]  # type: ignore[assignment]
+    if join_list is None:
+        return None
+    rows: list[tuple[str, object]] = []
+    if header_key is not None:
+        rows.append((header_key, 1))
+    for el in join_list.elts:
+        key = _blob_key_of(el, locals_map)
+        rows.append((key or "?", _astype_width(el)))
+    return rows
+
+
+def _encoder_blob_keys(src: SourceFile) -> set[str]:
+    """Keys of the blob dict the Pallas encoder entry returns."""
+    keys: set[str] = set()
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Name) and tgt.id == "blob"
+                        and isinstance(node.value, ast.Dict)):
+                    keys |= {k.value for k in node.value.keys
+                             if isinstance(k, ast.Constant)}
+                elif (isinstance(tgt, ast.Subscript)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "blob"
+                        and isinstance(tgt.slice, ast.Constant)):
+                    keys.add(str(tgt.slice.value))
+    return keys
+
+
+@register(
+    "format-schema-drift",
+    "docs/FORMAT.md section-6 field table / serialized layout diverges from "
+    "format_doc.serialize_page or the encoder blob fields",
+    scope="project",
+)
+def check_format_schema_drift(project: Project) -> Iterator[Finding]:
+    ser_src = project.by_rel.get(_SERIALIZER_MOD)
+    doc_path = project.root / _FORMAT_DOC
+    if ser_src is None or not doc_path.is_file():
+        return                                 # fixture projects: no contract
+    text = doc_path.read_text(encoding="utf-8")
+    doc_lines = text.splitlines()
+
+    def anchor(lineno: int) -> str:
+        return doc_lines[lineno - 1].strip() if lineno <= len(doc_lines) else ""
+
+    sec = _doc_section6(text)
+    if sec is None:
+        yield Finding(
+            "format-schema-drift", _FORMAT_DOC, 1, 0,
+            "docs/FORMAT.md has no '## 6.' blob-layout section to check "
+            "against format_doc.serialize_page", anchor(1))
+        return
+    base, sec_lines = sec
+
+    code_layout = _serializer_layout(ser_src)
+    if code_layout is None:
+        yield Finding(
+            "format-schema-drift", ser_src.rel, 1, 0,
+            "could not extract the serialized-page layout from "
+            "format_doc.serialize_page (expected a b''.join([...]) of "
+            "blob-field .astype(...) chunks)", ser_src.anchor(1))
+        return
+
+    doc_layout = _doc_layout(sec_lines, base)
+    doc_seq = [(n, w) for n, w, _ in doc_layout]
+    if doc_seq != code_layout:
+        line = doc_layout[0][2] if doc_layout else base
+        yield Finding(
+            "format-schema-drift", _FORMAT_DOC, line, 0,
+            "serialized-page layout in docs/FORMAT.md section 6 "
+            f"({doc_seq}) diverges from format_doc.serialize_page "
+            f"({code_layout}); regenerate the doc or fix the serializer",
+            anchor(line))
+
+    table = _doc_table_fields(sec_lines, base)
+    enc_src = project.by_rel.get(_ENCODER_MOD)
+    if enc_src is not None and table:
+        doc_fields = {n for n, _ in table}
+        enc_fields = _encoder_blob_keys(enc_src)
+        if enc_fields and doc_fields != enc_fields:
+            missing = sorted(enc_fields - doc_fields)
+            extra = sorted(doc_fields - enc_fields)
+            line = table[0][1]
+            parts = []
+            if missing:
+                parts.append(f"encoder blob fields missing from the table: {missing}")
+            if extra:
+                parts.append(f"table rows with no encoder blob field: {extra}")
+            yield Finding(
+                "format-schema-drift", _FORMAT_DOC, line, 0,
+                "blob field table in docs/FORMAT.md section 6 diverges from "
+                f"the encoder blob dict ({'; '.join(parts)})", anchor(line))

@@ -7,8 +7,11 @@ whole batch pipeline; a Python ``if`` on a traced value raises
 call site without ``static_argnames`` on its config argument retraces
 per call; an unseeded RNG makes parity failures unreproducible.
 
-All context sensitivity comes from :mod:`repro.analysis._ast_util`'s
-device-context walk — host-side code is exempt from the trace rules.
+Context sensitivity comes from :mod:`repro.analysis._ast_util`'s
+device-context walk — host-side code is exempt from the trace rules —
+plus :mod:`repro.analysis.callgraph`'s module-local propagation: a
+module-level helper with no jit decorator of its own is still held to
+the sync rules when a jitted entry in the same file calls it.
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import ast
 from typing import Iterator
 
 from repro.analysis import _ast_util as U
+from repro.analysis import callgraph as CG
 from repro.analysis.base import register
 from repro.analysis.finding import Finding
 from repro.analysis.project import SourceFile
@@ -51,9 +55,14 @@ def _is_constant_like(node: ast.expr) -> bool:
 def check_host_sync(src: SourceFile) -> Iterator[Finding]:
     if src.is_test:
         return
-    for ctx in U.walk_functions(src.tree):
-        if not ctx.device:
+    graph = CG.build_callgraph(src.tree)
+    for qualname, fnode in graph.nodes.items():
+        ctx = fnode.ctx
+        if not graph.is_device(qualname):
             continue
+        # trace-reachable but not lexically device: a plain helper that a
+        # jitted entry in this module calls — same hazard, different phrasing
+        propagated = not ctx.device
         for node in ast.walk(ctx.node):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not ctx.node:
                 continue  # nested fns yielded separately by walk_functions
@@ -77,6 +86,11 @@ def check_host_sync(src: SourceFile) -> Iterator[Finding]:
             elif U.dotted_name(fn) == "jax.device_get":
                 msg = "jax.device_get inside traced code forces a host round-trip"
             if msg is not None:
+                if propagated:
+                    entries = CG.device_callers(src.tree, qualname)
+                    via = ", ".join(f"`{e}`" for e in entries) or "a jitted entry"
+                    msg += (f" — `{qualname}` carries no jit decorator but is "
+                            f"trace-reachable (called from {via} in this module)")
                 yield Finding("jit-host-sync", src.rel, node.lineno, node.col_offset,
                               msg, src.anchor(node.lineno))
 

@@ -34,7 +34,7 @@ from repro.core.gbdi_fr import FRConfig, fit_fr_bases, fr_decode, fr_encode
 from repro.eval.registry import CodecRegistry
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=4)
 def _word_cast(word_bits: int):
     """Jitted signed-page-words -> unsigned-words cast (value-identical to
     :func:`repro.core.gbdi.signed_to_words`, but on device: decoded pages

@@ -25,7 +25,40 @@ from jax.experimental import pallas as pl
 from repro.core.format import WORD16_MASK, TableLike, as_base_table
 from repro.core.gbdi_fr import FRConfig
 from repro.kernels.gbdi_decode import _gather_chunks
-from repro.kernels.gbdi_encode import _cumsum_lanes, k_padded, pad_table
+from repro.kernels.gbdi_encode import (
+    SLOT_CHUNK,
+    VMEM_BUDGET_BYTES,
+    _cumsum_lanes,
+    k_padded,
+    pad_table,
+)
+
+
+def attn_vmem_tile_bytes(cfg: FRConfig, *, n_kv: int, hd: int, groups: int) -> int:
+    """Conservative per-grid-step VMEM estimate for the fused kernel:
+    one K page + one V page decoded in-register next to the q/acc tiles."""
+    w = 4
+    P, k_pad = cfg.page_words, k_padded(cfg)
+    page_blob = (cfg.ptr_lanes + cfg.delta_lanes + 2 * cfg.outlier_cap + 1) * w
+    io = (2 * page_blob                      # compressed K + V page tiles
+          + 2 * k_pad * w                    # base table + width classes
+          + 2 * n_kv * groups * hd * w       # q in, acc out
+          + 2 * n_kv * groups * w * 2)       # m/l scratch in + out
+    # transients of one _decode_words call: base one-hot, gather chunk,
+    # outlier one-hot, and codes/ranks/masks scratch
+    decode = (P * k_pad + P * SLOT_CHUNK + P * cfg.outlier_cap + 8 * P) * w
+    kv = 2 * P * w                           # decoded K and V words as f32
+    return io + 2 * decode + kv
+
+
+def _check_attn_vmem(cfg: FRConfig, *, n_kv: int, hd: int, groups: int) -> None:
+    est = attn_vmem_tile_bytes(cfg, n_kv=n_kv, hd=hd, groups=groups)
+    if est > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"paged-attn grid step needs ~{est >> 20} MiB VMEM "
+            f"(> {VMEM_BUDGET_BYTES >> 20} MiB); shrink page_words "
+            f"(={cfg.page_words}) or the head tile (n_kv={n_kv}, hd={hd})"
+        )
 
 
 def _decode_words(
@@ -138,6 +171,7 @@ def paged_attention_decode(
     # serving KV configs are single-profile (adaptive pages go through
     # kernels.xla.paged_attention_decode, which selects per page)
     assert cfg.num_profiles == 1, "Pallas paged-attn needs a single-profile cfg"
+    _check_attn_vmem(cfg, n_kv=n_kv, hd=hd, groups=groups)
     k_pad = k_padded(cfg)
     bases_p, cls_p = pad_table(as_base_table(table, default_width=cfg.widest_bits), cfg)
     pos_arr = jnp.full((1, 1), pos, jnp.int32)

@@ -18,6 +18,7 @@ half a terabyte) — logits live per-chunk, vocab-sharded.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING, Any
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,9 @@ from repro.models.layers import (
     rmsnorm_init,
 )
 from repro.models.transformer import stack_apply, stack_cache_init, stack_init
+
+if TYPE_CHECKING:  # runtime import stays lazy (layering: serving imports models)
+    from repro.serving.kv_cache import KVSpec
 
 
 def _pick_chunk(S: int, target: int) -> int:
@@ -46,7 +50,7 @@ class Model:
     cfg: ModelConfig
 
     # -- init ---------------------------------------------------------------
-    def init(self, key) -> Params:
+    def init(self, key: jax.Array) -> Params:
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
         ke, ks, kh = jax.random.split(key, 3)
@@ -79,7 +83,8 @@ class Model:
         return jnp.einsum("bsd,dv->bsv", h, p["head"])
 
     # -- forward ------------------------------------------------------------
-    def hidden(self, p: Params, batch: dict, *, cache=None, cache_pos=None, mode="train"):
+    def hidden(self, p: Params, batch: dict, *, cache: Params | None = None,
+               cache_pos: Any = None, mode: str = "train") -> tuple[jax.Array, Any, Any, int]:
         cfg = self.cfg
         x, prefix_len = self._embed_inputs(p, batch)
         x = constrain_batch(x, cfg)
@@ -160,7 +165,8 @@ class Model:
         tail = sum(1 for s in cfg.tail_layers if s.mixer in attn)
         return cfg.n_periods * per_period + tail
 
-    def kv_cache_spec(self, max_len: int, *, fr=None, resident_decode: bool = False):
+    def kv_cache_spec(self, max_len: int, *, fr: Any = None,
+                      resident_decode: bool = False) -> "KVSpec":
         """Per-layer compressed-KV geometry (:class:`repro.serving.kv_cache.KVSpec`)
         matching this model's attention shape — the unit of the serving
         scheduler's byte-budget accounting (``spec.compressed_bytes(1)`` /
@@ -174,7 +180,7 @@ class Model:
                       max_len=max_len, fr=fr if fr is not None else KV_FR,
                       resident_decode=resident_decode)
 
-    def prefill(self, p: Params, batch: dict, cache: Params):
+    def prefill(self, p: Params, batch: dict, cache: Params) -> tuple[Params, jax.Array]:
         h, new_cache, _, _ = self.hidden(p, batch, cache=cache, mode="prefill")
         logits = self._head(p, h[:, -1:])
         return new_cache, logits
@@ -204,13 +210,15 @@ class Model:
         out["tail"] = jax.tree.map(merge(0), old["tail"], new["tail"])
         return out
 
-    def prefill_into(self, p: Params, batch: dict, cache: Params, row_mask: jax.Array):
+    def prefill_into(self, p: Params, batch: dict, cache: Params,
+                     row_mask: jax.Array) -> tuple[Params, jax.Array]:
         """Prefill only the batch rows selected by ``row_mask`` (bool (B,)),
         leaving every other row's cache untouched (bit-stable)."""
         new_cache, logits = self.prefill(p, batch, cache)
         return self.merge_cache_rows(cache, new_cache, row_mask), logits
 
-    def decode_step(self, p: Params, step_in: dict, cache: Params, pos):
+    def decode_step(self, p: Params, step_in: dict, cache: Params,
+                    pos: Any) -> tuple[jax.Array, Params]:
         """step_in: {"tokens": (B,1)} (LM/vlm) or {"frame_embeds": (B,1,d)}.
 
         ``pos`` is a scalar (shared decode position) or a (B,) vector of

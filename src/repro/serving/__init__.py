@@ -1,0 +1,37 @@
+"""Serving stack: batched engine, GBDI-FR compressed KV cache, and the
+byte-budget continuous-batching scheduler.
+
+* :mod:`repro.serving.engine` — fixed-slot continuous batching
+  (:class:`~repro.serving.engine.Engine`), per-slot decode positions,
+  masked prefill-into-free-slot admission.
+* :mod:`repro.serving.kv_cache` — paged KV cache whose pages are
+  GBDI-FR compressed blobs (:class:`~repro.serving.kv_cache.KVSpec`),
+  with the optional incremental resident-decode region.
+* :mod:`repro.serving.scheduler` — admission/eviction policy under a KV
+  byte budget with token-level per-request reservations
+  (:class:`~repro.serving.scheduler.Scheduler`).
+
+The package is part of the ``mypy --strict`` gate (see
+``docs/ANALYSIS.md`` §"The generic gate").
+"""
+from __future__ import annotations
+
+from repro.serving.engine import Engine, Request
+from repro.serving.kv_cache import KV_FR, KVSpec
+from repro.serving.scheduler import (
+    AdmissionError,
+    RequestState,
+    Scheduler,
+    ServeRequest,
+)
+
+__all__ = [
+    "AdmissionError",
+    "Engine",
+    "KV_FR",
+    "KVSpec",
+    "Request",
+    "RequestState",
+    "Scheduler",
+    "ServeRequest",
+]

@@ -15,10 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import numpy.typing as npt
 
 from repro.models.api import Model
 from repro.serving import kv_cache
@@ -28,14 +30,14 @@ from repro.serving.kv_cache import KVSpec
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray          # (S,) int32
+    prompt: npt.NDArray[np.int32]       # (S,)
     max_new: int = 16
-    out: list = dataclasses.field(default_factory=list)
+    out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 @functools.lru_cache(maxsize=8)
-def _model_jits(model: Model):
+def _model_jits(model: Model) -> tuple[Callable[..., Any], Callable[..., Any]]:
     """Per-model jitted decode/prefill, shared by every Engine over that
     model: a fresh Engine must not retrace or recompile anything — serving
     respawns engines per configuration sweep cell, and the scheduler
@@ -45,7 +47,8 @@ def _model_jits(model: Model):
 
 
 class Engine:
-    def __init__(self, model: Model, params, *, batch_slots: int = 4, max_len: int = 256):
+    def __init__(self, model: Model, params: Any, *,
+                 batch_slots: int = 4, max_len: int = 256) -> None:
         self.model, self.params = model, params
         self.B, self.max_len = batch_slots, max_len
         self.cache = model.init_cache(batch_slots, max_len)
@@ -73,7 +76,8 @@ class Engine:
         test_substrate).
         """
         for i in range(self.B):  # done slots are released wholesale
-            if self.slot_req[i] is not None and self.slot_req[i].done:
+            held = self.slot_req[i]
+            if held is not None and held.done:
                 self.release(i)
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         take = reqs[: len(free)]
@@ -113,12 +117,11 @@ class Engine:
 
     def tick(self) -> bool:
         """Decode one token for every active slot. Returns any-active."""
-        active = [i for i, r in enumerate(self.slot_req)
-                  if r is not None and not r.done]
-        if not active:
+        live = [(i, r) for i, r in enumerate(self.slot_req)
+                if r is not None and not r.done]
+        if not live:
             return False
-        for i in active:
-            r = self.slot_req[i]
+        for i, r in live:
             # per-slot cache ceiling: decoding at position p writes KV row
             # p, so the last decodable position is max_len - 1 — a slot is
             # done only once slot_pos passes it (marking done at
@@ -128,8 +131,8 @@ class Engine:
             # it released.
             if self.slot_pos[i] >= self.max_len or len(r.out) >= r.max_new:
                 r.done = True
-        active = [i for i in active if not self.slot_req[i].done]
-        if not active:
+        live = [(i, r) for i, r in live if not r.done]
+        if not live:
             return False
         last = np.zeros((self.B, 1), np.int32)
         for i, r in enumerate(self.slot_req):
@@ -140,8 +143,7 @@ class Engine:
             jnp.asarray(self.slot_pos),
         )
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for i in active:
-            r = self.slot_req[i]
+        for i, r in live:
             self.slot_pos[i] += 1
             r.out.append(int(nxt[i]))
             if len(r.out) >= r.max_new or self.slot_pos[i] >= self.max_len:
@@ -161,8 +163,8 @@ class KVSession:
     without it every step re-decodes all pages (linear).
     """
 
-    def __init__(self, spec: KVSpec, batch: int, table, *,
-                 backend: str = "auto"):
+    def __init__(self, spec: KVSpec, batch: int, table: Any, *,
+                 backend: str = "auto") -> None:
         self.spec, self.backend = spec, backend
         self.cache = kv_cache.init_compressed(spec, batch, table)
         self.pos = 0
@@ -170,12 +172,14 @@ class KVSession:
         self._attend = jax.jit(functools.partial(
             kv_cache.attention_decode, spec, backend=backend))
 
-        def prefill_body(spec, ks, vs, cache, start):
-            def body(i, c):
+        def prefill_body(spec: KVSpec, ks: jax.Array, vs: jax.Array,
+                         cache: kv_cache.Cache, start: jax.Array) -> kv_cache.Cache:
+            def body(i: jax.Array, c: kv_cache.Cache) -> kv_cache.Cache:
                 k = jax.lax.dynamic_slice_in_dim(ks, i, 1, axis=1)
                 v = jax.lax.dynamic_slice_in_dim(vs, i, 1, axis=1)
                 return kv_cache.append(spec, c, k, v, start + i)
-            return jax.lax.fori_loop(0, ks.shape[1], body, cache)
+            out: kv_cache.Cache = jax.lax.fori_loop(0, ks.shape[1], body, cache)
+            return out
 
         self._prefill = jax.jit(functools.partial(prefill_body, spec))
 
@@ -193,4 +197,5 @@ class KVSession:
         """One decode step: append this token's K/V, attend with ``q`` over
         everything appended so far.  Returns (B, 1, H*hd)."""
         self.append(k, v)
-        return self._attend(q, self.cache, jnp.int32(self.pos - 1))
+        out: jax.Array = self._attend(q, self.cache, jnp.int32(self.pos - 1))
+        return out

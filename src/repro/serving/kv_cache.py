@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,9 @@ KV_FR = FRConfig(word_bits=16, page_words=DEFAULT_PAGE_WORDS,
                  num_bases=DEFAULT_NUM_BASES, width_set=(8,),
                  bucket_caps=(DEFAULT_PAGE_WORDS,),
                  outlier_cap=DEFAULT_OUTLIER_CAP)
+
+# the cache tree: array leaves plus the fitted BaseTable pytree
+Cache = dict[str, Any]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,12 +137,12 @@ class KVSpec:
         return 2 * batch * n * self.row_words * self.word_bytes
 
 
-def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> dict:
+def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> Cache:
     fr = spec.fr
     pages_per_row = max(1, spec.row_words // fr.page_words)
     n_slots = spec.n_pages * pages_per_row
 
-    def page_zeros():
+    def page_zeros() -> dict[str, jax.Array]:
         z = {
             "ptrs": jnp.zeros((batch, n_slots, fr.ptr_lanes), jnp.int32),
             "deltas": jnp.zeros((batch, n_slots, fr.delta_lanes), jnp.int32),
@@ -151,8 +155,8 @@ def init_compressed(spec: KVSpec, batch: int, table: BaseTable) -> dict:
         return z
 
     tail = jnp.zeros((batch, spec.page_tokens, spec.n_kv, spec.head_dim), jnp.bfloat16)
-    cache = {"k_pages": page_zeros(), "v_pages": page_zeros(),
-             "k_tail": tail, "v_tail": tail, "table": table}
+    cache: Cache = {"k_pages": page_zeros(), "v_pages": page_zeros(),
+                    "k_tail": tail, "v_tail": tail, "table": table}
     if spec.resident_decode:
         # Seed the resident region by decoding the zero page tree, NOT with
         # plain zeros: a zero blob decodes to bases[0]-derived words, and the
@@ -171,7 +175,7 @@ def _from_words(w: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(w.astype(jnp.uint16), jnp.bfloat16)
 
 
-def _compress_rows(spec: KVSpec, rows: jax.Array, table: BaseTable) -> dict:
+def _compress_rows(spec: KVSpec, rows: jax.Array, table: BaseTable) -> dict[str, jax.Array]:
     """rows: (B, page_tokens, Kv, hd) -> per-batch page blobs (B, ppr, ...).
 
     All B * pages_per_row pages go through ONE batched compiled dispatch
@@ -187,7 +191,7 @@ def _compress_rows(spec: KVSpec, rows: jax.Array, table: BaseTable) -> dict:
     return blob
 
 
-def _decompress_all(spec: KVSpec, pages: dict, table: BaseTable) -> jax.Array:
+def _decompress_all(spec: KVSpec, pages: dict[str, jax.Array], table: BaseTable) -> jax.Array:
     """-> (B, n_pages*page_tokens, Kv, hd) bf16; one batched dispatch.
 
     Routed through the pipeline front-end: the fused XLA chain under a
@@ -199,7 +203,7 @@ def _decompress_all(spec: KVSpec, pages: dict, table: BaseTable) -> jax.Array:
     return _from_words(words.reshape(B, -1, spec.n_kv, spec.head_dim))
 
 
-def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array) -> dict:
+def append(spec: KVSpec, cache: Cache, k: jax.Array, v: jax.Array, pos: jax.Array) -> Cache:
     """Append one token (B, 1, Kv, hd) at absolute position ``pos``."""
     pt = spec.page_tokens
     slot = pos % pt
@@ -208,17 +212,18 @@ def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array
     page_id = pos // pt
     pages_per_row = max(1, spec.row_words * pt // spec.fr.page_words)
 
-    def flush(c):
+    def flush(c: Cache) -> Cache:
         kb = _compress_rows(spec, k_tail, cache["table"])
         vb = _compress_rows(spec, v_tail, cache["table"])
-        def put(dst, src):
-            return jax.tree_util.tree_map(
+        def put(dst: dict[str, jax.Array], src: dict[str, jax.Array]) -> dict[str, jax.Array]:
+            merged: dict[str, jax.Array] = jax.tree_util.tree_map(
                 lambda d, s: jax.lax.dynamic_update_slice(
                     d, s.astype(d.dtype),
                     (0, page_id * pages_per_row) + (0,) * (d.ndim - 2),
                 ),
                 dst, src,
             )
+            return merged
         out = {**c, "k_pages": put(c["k_pages"], kb), "v_pages": put(c["v_pages"], vb),
                "k_tail": k_tail, "v_tail": v_tail}
         if "k_dec" in c:
@@ -226,7 +231,7 @@ def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array
             # tail — capacity-dropped outliers must round-trip identically to
             # a from-scratch decode of the page slots) and land it at this
             # page's token offset.  O(one page) per flush; reads reuse it.
-            def dec(blob):
+            def dec(blob: dict[str, jax.Array]) -> jax.Array:
                 w = fr_pipeline.decode_pages(blob, cache["table"], spec.fr)
                 B = w.shape[0]
                 return _from_words(w.reshape(B, pt, spec.n_kv, spec.head_dim))
@@ -236,13 +241,14 @@ def append(spec: KVSpec, cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array
                 c["v_dec"], dec(vb), (0, page_id * pt, 0, 0))
         return out
 
-    def nop(c):
+    def nop(c: Cache) -> Cache:
         return {**c, "k_tail": k_tail, "v_tail": v_tail}
 
-    return jax.lax.cond(slot == pt - 1, flush, nop, cache)
+    out: Cache = jax.lax.cond(slot == pt - 1, flush, nop, cache)
+    return out
 
 
-def read_full(spec: KVSpec, cache: dict, pos: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+def read_full(spec: KVSpec, cache: Cache, pos: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """-> (K, V, valid) covering [0, pos]: decompressed pages with the raw
     tail overlaid for the current (unflushed) page.
 
@@ -267,7 +273,7 @@ def read_full(spec: KVSpec, cache: dict, pos: jax.Array) -> tuple[jax.Array, jax
 
 
 def attention_decode(
-    spec: KVSpec, q: jax.Array, cache: dict, pos: jax.Array,
+    spec: KVSpec, q: jax.Array, cache: Cache, pos: jax.Array,
     backend: str = "auto",
 ) -> jax.Array:
     """q: (B, 1, H, hd) -> (B, 1, H*hd) over the compressed cache.

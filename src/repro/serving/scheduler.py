@@ -11,10 +11,12 @@ serving story on top of :class:`repro.serving.engine.Engine`:
   FIFO within a priority class (a heap keyed ``(-priority, arrival_seq)``).
 * **Byte-budget admission** — a request is admitted only when a free
   engine slot exists AND the *compressed* KV bytes of one more resident
-  sequence fit the budget.  The per-sequence cost is fed by
-  ``KVSpec.compressed_bytes(1)`` (or ``raw_bytes(1)`` for the raw-cache
-  baseline) times the model's attention layer count — byte pressure, not
-  slot count, is the admission control (``accounting='compressed'|'raw'``).
+  sequence fit the budget.  The per-sequence cost is token-level: each
+  request reserves ``KVSpec.compressed_bytes_upto(1, prompt + max_new)``
+  (or ``raw_bytes_upto`` for the raw-cache baseline) times the model's
+  attention layer count — its own final context, not the cache ceiling,
+  so short sequences no longer pre-pay for ``max_len`` and more of them
+  fit one budget (``accounting='compressed'|'raw'``).
 * **Eviction to a host-side parking buffer** — when the queue head
   outranks a resident sequence, the lowest-priority decoding sequence
   (cheapest context first) is parked: its tokens already live host-side
@@ -42,10 +44,13 @@ import dataclasses
 import enum
 import heapq
 import time
+from typing import Any
 
 import numpy as np
+import numpy.typing as npt
 
 from repro.serving.engine import Engine, Request
+from repro.serving.kv_cache import KVSpec
 
 
 class RequestState(enum.Enum):
@@ -69,11 +74,11 @@ class ServeRequest:
     latency bookkeeping in scheduler ticks and wall-clock seconds."""
 
     rid: int
-    prompt: np.ndarray                  # (S,) int32
+    prompt: npt.NDArray[np.int32]       # (S,)
     max_new: int = 16
     priority: int = 0
     state: RequestState = RequestState.QUEUED
-    out: list = dataclasses.field(default_factory=list)
+    out: list[int] = dataclasses.field(default_factory=list)
     submit_tick: int = 0
     admit_tick: int | None = None       # first admission (queue latency)
     first_token_tick: int | None = None
@@ -85,8 +90,12 @@ class ServeRequest:
     # internal: engine linkage while resident
     _slot: int | None = dataclasses.field(default=None, repr=False)
     _engine_req: Request | None = dataclasses.field(default=None, repr=False)
-    _base_out: list = dataclasses.field(default_factory=list, repr=False)
+    _base_out: list[int] = dataclasses.field(default_factory=list, repr=False)
     _seq: int = dataclasses.field(default=0, repr=False)
+    # KV bytes this request reserves while resident: its own final
+    # context (prompt + max_new, clipped to the cache ceiling), fixed at
+    # submit so the reservation is identical across park/resume cycles
+    _reserved: int = dataclasses.field(default=0, repr=False)
 
     @property
     def context_len(self) -> int:
@@ -101,16 +110,21 @@ class Scheduler:
     own :meth:`repro.models.api.Model.kv_cache_spec` at the engine's
     ``max_len``) under the chosen ``accounting``:
 
-    * ``'compressed'`` — ``n_kv_layers * spec.compressed_bytes(1)``: the
-      GBDI-FR page + tail footprint the compressed cache actually keeps
-      resident.
-    * ``'raw'`` — ``n_kv_layers * spec.raw_bytes(1)``: the uncompressed
-      baseline; at an equal budget it admits fewer concurrent sequences,
-      which is exactly the headline ``BENCH_serving.json`` measures.
+    * ``'compressed'`` — ``n_kv_layers * spec.compressed_bytes_upto(1,
+      prompt + max_new)``: the GBDI-FR page + tail footprint the
+      request's own final context actually keeps resident.
+    * ``'raw'`` — the same context under ``raw_bytes_upto``: the
+      uncompressed baseline; at an equal budget it admits fewer
+      concurrent sequences, which is exactly the headline
+      ``BENCH_serving.json`` measures.
+
+    ``bytes_per_seq`` (the old static ``max_len`` slot cost) remains the
+    worst-case per-sequence bound — benchmarks size budgets with it.
     """
 
     def __init__(self, engine: Engine, *, byte_budget: int,
-                 kv_spec=None, accounting: str = "compressed"):
+                 kv_spec: KVSpec | None = None,
+                 accounting: str = "compressed") -> None:
         if accounting not in ("compressed", "raw"):
             raise ValueError(f"unknown accounting {accounting!r}; "
                              "choose from ('compressed', 'raw')")
@@ -144,6 +158,14 @@ class Scheduler:
                 else self.spec.raw_bytes_upto)
         return self.n_kv_layers * upto(1, n_tokens)
 
+    def reserve_bytes(self, req: ServeRequest) -> int:
+        """Token-level KV reservation for one request: the bytes its own
+        final context (``prompt + max_new``, clipped to the cache ceiling)
+        will occupy — not the static ``max_len`` slot, so short sequences
+        don't pre-pay for headroom they can never use."""
+        final_ctx = min(self.engine.max_len, len(req.prompt) + req.max_new)
+        return self.prompt_bytes(final_ctx)
+
     @property
     def resident(self) -> list[ServeRequest]:
         return [r for r in self.requests.values()
@@ -151,7 +173,7 @@ class Scheduler:
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, prompt, *, max_new: int = 16, priority: int = 0) -> ServeRequest:
+    def submit(self, prompt: Any, *, max_new: int = 16, priority: int = 0) -> ServeRequest:
         """Enqueue one request; raises :class:`AdmissionError` for requests
         that could never run (even with every other sequence evicted)."""
         prompt = np.asarray(prompt, np.int32)
@@ -176,12 +198,14 @@ class Scheduler:
                 f"request {req.rid}: prompt alone needs {pb} KV bytes "
                 f"({self.accounting} accounting) > byte budget "
                 f"{self.byte_budget} — it can never be admitted")
-        if self.bytes_per_seq > self.byte_budget:
+        req._reserved = self.reserve_bytes(req)
+        if req._reserved > self.byte_budget:
             req.state = RequestState.REJECTED
             self.counters["rejected"] += 1
             raise AdmissionError(
-                f"request {req.rid}: one resident sequence costs "
-                f"{self.bytes_per_seq} KV bytes ({self.accounting} "
+                f"request {req.rid}: its final context of "
+                f"{min(self.engine.max_len, len(prompt) + max_new)} tokens "
+                f"costs {req._reserved} KV bytes ({self.accounting} "
                 f"accounting) > byte budget {self.byte_budget}")
         heapq.heappush(self._queue, (-priority, req._seq, req))
         return req
@@ -204,7 +228,7 @@ class Scheduler:
         req._engine_req = None
         req.state = RequestState.PARKED
         req.evictions += 1
-        self.resident_bytes -= self.bytes_per_seq
+        self.resident_bytes -= req._reserved
         self.counters["evicted"] += 1
         # original arrival seq: a parked sequence resumes ahead of later
         # arrivals of its own priority class (FIFO fairness)
@@ -253,7 +277,7 @@ class Scheduler:
 
     # -- introspection ------------------------------------------------------
 
-    def state_counts(self) -> dict:
+    def state_counts(self) -> dict[str, int]:
         counts = {s.name: 0 for s in RequestState}
         for r in self.requests.values():
             counts[r.state.name] += 1
@@ -286,7 +310,7 @@ class Scheduler:
                 req.state = RequestState.DONE
                 req.done_tick = self.ticks
                 req.done_t = time.perf_counter()
-                self.resident_bytes -= self.bytes_per_seq
+                self.resident_bytes -= req._reserved
                 self.counters["finished"] += 1
 
     def _admit(self) -> None:
@@ -297,8 +321,8 @@ class Scheduler:
             if head.state not in (RequestState.QUEUED, RequestState.PARKED):
                 heapq.heappop(self._queue)      # stale heap entry
                 continue
-            fits_bytes = (self.resident_bytes
-                          + (len(batch) + 1) * self.bytes_per_seq
+            pending = sum(r._reserved for r in batch)
+            fits_bytes = (self.resident_bytes + pending + head._reserved
                           <= self.byte_budget)
             if free > 0 and fits_bytes:
                 heapq.heappop(self._queue)
@@ -318,7 +342,7 @@ class Scheduler:
             req.state = RequestState.PREFILLING
             if req.admit_tick is None:
                 req.admit_tick = self.ticks
-        engine_reqs = []
+        engine_reqs: list[Request] = []
         for req in batch:
             resume = bool(req.out)
             ctx = (np.concatenate([req.prompt, np.asarray(req.out, np.int32)])
@@ -332,7 +356,7 @@ class Scheduler:
             self.counters["resumed" if resume else "admitted"] += 1
         n = self.engine.admit(engine_reqs)
         assert n == len(batch), "scheduler admission exceeded engine slots"
-        self.resident_bytes += len(batch) * self.bytes_per_seq
+        self.resident_bytes += sum(r._reserved for r in batch)
         for req in batch:
             req._slot = self.engine.slot_req.index(req._engine_req)
             req.state = RequestState.DECODING

@@ -376,8 +376,449 @@ def test_backend_parity_ignores_private_defs():
 
 
 # --------------------------------------------------------------------------
-# baseline workflow
+# jit-host-sync: call-graph device-context propagation
 # --------------------------------------------------------------------------
+
+def test_host_sync_propagates_through_module_helper():
+    # the helper carries no decorator, but the jitted entry calls it: the
+    # .item()/np.asarray hazard is identical to writing it inline
+    fs = checks_of({"src/a.py": """
+        import jax
+        import numpy as np
+
+        def helper(x):
+            return np.asarray(x)
+
+        @jax.jit
+        def f(x):
+            return helper(x) + 1
+    """}, "jit-host-sync")
+    assert len(fs) == 1
+    assert "trace-reachable" in fs[0].message and "`f`" in fs[0].message
+    assert fs[0].anchor == "return np.asarray(x)"
+
+
+def test_host_sync_stops_at_tracer_boundary():
+    # a host/device dispatcher that tests isinstance(..., Tracer) routes
+    # concrete inputs to host helpers deliberately — the propagation must
+    # not walk through it (the kernels/xla.py _decode_batch idiom)
+    fs = checks_of({"src/a.py": """
+        import jax
+        import numpy as np
+
+        def _digest(x):
+            return np.asarray(x).tobytes()
+
+        def dispatch(x):
+            if isinstance(x, jax.core.Tracer):
+                return x * 2
+            return _digest(x)
+
+        @jax.jit
+        def f(x):
+            return dispatch(x)
+    """}, "jit-host-sync")
+    assert fs == []
+
+
+def test_callgraph_device_closure_and_callers():
+    import ast as _ast
+
+    from repro.analysis.callgraph import build_callgraph, device_callers
+
+    tree = _ast.parse(textwrap.dedent("""
+        import jax
+
+        def leaf(x):
+            return x + 1
+
+        def mid(x):
+            return leaf(x)
+
+        def unrelated(x):
+            return x
+
+        @jax.jit
+        def entry(x):
+            return mid(x)
+    """))
+    g = build_callgraph(tree)
+    assert g.is_device("entry") and g.is_device("mid") and g.is_device("leaf")
+    assert not g.is_device("unrelated")
+    assert device_callers(tree, "leaf") == ["entry"]
+
+
+# --------------------------------------------------------------------------
+# use-after-donate
+# --------------------------------------------------------------------------
+
+def test_use_after_donate_fires_on_read_after_call():
+    fs = checks_of({"src/a.py": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(state, x):
+            return state + x
+
+        def drive(state, xs):
+            out = step(state, xs)
+            return state.sum() + out
+    """}, "use-after-donate")
+    assert len(fs) == 1
+    assert "`state`" in fs[0].message and "`step`" in fs[0].message
+
+
+def test_use_after_donate_fires_through_call_form_jit():
+    fs = checks_of({"src/a.py": """
+        import jax
+
+        def step(state, x):
+            return state + x
+
+        fast_step = jax.jit(step, donate_argnums=(0,))
+
+        def drive(state, x):
+            y = fast_step(state, x)
+            return state + y
+    """}, "use-after-donate")
+    assert len(fs) == 1 and "`fast_step`" in fs[0].message
+
+
+def test_use_after_donate_fires_on_loop_carried_read():
+    # iteration 1 donates `state`; iteration 2 reads the dead name
+    fs = checks_of({"src/a.py": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(state, x):
+            return state + x
+
+        def drive(state, xs):
+            acc = 0
+            for x in xs:
+                acc = acc + step(state, x)
+            return acc
+    """}, "use-after-donate")
+    assert len(fs) == 1 and "`state`" in fs[0].message
+
+
+def test_use_after_donate_silent_on_rebound_and_threaded():
+    fs = checks_of({"src/a.py": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(state, x):
+            return state + x
+
+        def drive(state, xs):
+            state = step(state, xs)        # donated-then-rebound: safe
+            for x in xs:
+                state = step(state, x)     # loop-carried rebind: safe
+            sub, state = xs[0], step(state, xs)  # tuple rebind: safe
+            return state + sub
+    """}, "use-after-donate")
+    assert fs == []
+
+
+def test_use_after_donate_merges_branches_conservatively():
+    # dead only on one branch -> not dead after the join (no false alarm)
+    fs = checks_of({"src/a.py": """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(state, x):
+            return state + x
+
+        def drive(state, xs, flag):
+            if flag:
+                out = step(state, xs)
+            else:
+                out = state * 2
+            return state.sum() + out
+    """}, "use-after-donate")
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# unbounded-module-cache
+# --------------------------------------------------------------------------
+
+def test_unbounded_cache_fires_on_dict_memo():
+    fs = checks_of({"src/a.py": """
+        _MEMO = {}
+
+        def get(key, build):
+            if key not in _MEMO:
+                _MEMO[key] = build(key)
+            return _MEMO[key]
+    """}, "unbounded-module-cache")
+    assert len(fs) == 1 and "_MEMO" in fs[0].message
+
+
+def test_unbounded_cache_fires_on_unbounded_lru():
+    fs = checks_of({"src/a.py": """
+        import functools
+
+        @functools.lru_cache(maxsize=None)
+        def solve(n):
+            return n * n
+
+        @functools.cache
+        def solve2(n):
+            return n + 1
+    """}, "unbounded-module-cache")
+    assert len(fs) == 2
+    assert all("eviction bound" in f.message for f in fs)
+
+
+def test_unbounded_cache_silent_on_bounded_and_fixed_schema():
+    fs = checks_of({"src/a.py": """
+        import functools
+        from collections import OrderedDict
+
+        _CACHE = OrderedDict()
+        _CAP = 16
+        _STATS = {"hits": 0, "misses": 0}
+
+        def get(key, build):
+            if key in _CACHE:
+                _STATS["hits"] += 1
+                return _CACHE[key]
+            _STATS["misses"] += 1
+            _CACHE[key] = build(key)
+            while len(_CACHE) > _CAP:
+                _CACHE.popitem(last=False)
+            return _CACHE[key]
+
+        @functools.lru_cache(maxsize=4)
+        def solve(n):
+            return n * n
+    """}, "unbounded-module-cache")
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# vmem-over-budget
+# --------------------------------------------------------------------------
+
+def test_vmem_budget_fires_on_untied_unregistered_pallas_module():
+    fs = checks_of({"src/repro/kernels/custom.py": """
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def entry(x):
+            return pl.pallas_call(kernel, out_shape=x)(x)
+    """}, "vmem-over-budget")
+    msgs = [f.message for f in fs]
+    assert len(fs) == 2
+    assert any("never references the shared VMEM" in m for m in msgs)
+    assert any("not registered" in m for m in msgs)
+
+
+def test_vmem_budget_fires_on_oversized_blockspec():
+    from repro.analysis.pallas_cost import cost_report
+
+    files = {"src/repro/kernels/gbdi_encode.py": """
+        from jax.experimental import pallas as pl
+
+        VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def entry(x):
+            spec = pl.BlockSpec((4096, 4096), lambda i: (i, 0))
+            return pl.pallas_call(kernel, in_specs=[spec], out_shape=x)(x)
+    """}
+    if cost_report(make_project(files)) is None:
+        pytest.skip("kernel stack unavailable: AST-only mode has no cost model")
+    fs = checks_of(files, "vmem-over-budget")
+    assert len(fs) == 1
+    assert "`entry`" in fs[0].message and "exceeds" in fs[0].message
+
+
+def test_vmem_budget_silent_on_small_tied_kernel():
+    fs = checks_of({"src/repro/kernels/gbdi_encode.py": """
+        from jax.experimental import pallas as pl
+
+        VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def entry(x):
+            spec = pl.BlockSpec((8, 128), lambda i: (i, 0))
+            return pl.pallas_call(kernel, in_specs=[spec], out_shape=x)(x)
+    """}, "vmem-over-budget")
+    assert fs == []
+
+
+def test_vmem_cost_report_covers_every_kernel_under_budget():
+    """The acceptance gate: every Pallas kernel in the repo evaluates
+    cleanly under VMEM_BUDGET_BYTES for its representative config."""
+    from repro.analysis.pallas_cost import _KERNEL_MODULES, cost_report
+
+    project = load_project([REPO / "src"], root=REPO)
+    report = cost_report(project)
+    if report is None:
+        pytest.skip("kernel stack unavailable: AST-only mode has no cost model")
+    assert {c.module for c in report} == set(_KERNEL_MODULES)
+    for c in report:
+        assert c.error is None, f"{c.module}:{c.kernel}: {c.error}"
+        assert c.ok, f"{c.module}:{c.kernel} over budget: {c.to_json()}"
+        assert c.blockspec_bytes > 0
+        assert c.model_bytes is not None
+
+
+# --------------------------------------------------------------------------
+# format-schema-drift
+# --------------------------------------------------------------------------
+
+_DRIFT_SER = """
+    import numpy as np
+
+    def serialize_page(blob, cfg):
+        val_dt = "<u2" if cfg.word_bits == 16 else "<u4"
+        profile = int(np.asarray(blob["profile"]))
+        header = bytes([profile])
+        deltas = np.asarray(blob["deltas"], np.int32)
+        return header + b"".join([
+            np.asarray(blob["ptrs"], np.int32).astype("<i4").tobytes(),
+            deltas.astype("<i4").tobytes(),
+            np.asarray(blob["out_vals"], np.int64).astype(val_dt).tobytes(),
+            np.asarray(blob["out_idx"], np.uint16).astype("<u2").tobytes(),
+            np.asarray(blob["n_out"], np.uint32).astype("<u4").tobytes(),
+        ])
+"""
+
+_DRIFT_ENC = """
+    def encode(x):
+        blob = {"ptrs": 1, "deltas": 2, "out_vals": 3, "out_idx": 4, "n_out": 5}
+        blob["profile"] = 6
+        return blob
+"""
+
+_DRIFT_DOC = """\
+# format
+
+## 6. Blob fields and serialized page layout
+
+| field | shape | dtype | content |
+|---|---|---|---|
+| `ptrs` | `(L,)` | int32 | codes |
+| `deltas` | `(D,)` | int32 | streams |
+| `out_vals` | `(c,)` | int32 | outliers |
+| `out_idx` | `(c,)` | int32 | positions |
+| `n_out` | scalar | int32 | count |
+| `profile` | scalar | int32 | profile id |
+
+```
+profile      : 1 byte (uint8)
+ptrs lanes   : L x 4 bytes (int32 LE)
+deltas lanes : D x 4 bytes (int32 LE)
+out_vals     : c x word_bits/8 bytes (word-sized LE)
+out_idx      : c x 2 bytes (uint16 LE)
+n_out        : 4 bytes (uint32 LE)
+```
+
+## 7. Next
+"""
+
+
+def _drift_project(tmp_path, doc_text):
+    (tmp_path / "docs").mkdir(parents=True, exist_ok=True)
+    (tmp_path / "docs" / "FORMAT.md").write_text(doc_text)
+    return make_project({
+        "src/repro/core/format_doc.py": _DRIFT_SER,
+        "src/repro/kernels/gbdi_encode.py": _DRIFT_ENC,
+    }, root=tmp_path)
+
+
+def test_schema_drift_silent_when_doc_matches_code(tmp_path):
+    fs = findings_of(_drift_project(tmp_path, _DRIFT_DOC), ["format-schema-drift"])
+    assert fs == []
+
+
+def test_schema_drift_fires_on_layout_reorder(tmp_path):
+    doc = _DRIFT_DOC.replace(
+        "out_vals     : c x word_bits/8 bytes (word-sized LE)\n"
+        "out_idx      : c x 2 bytes (uint16 LE)",
+        "out_idx      : c x 2 bytes (uint16 LE)\n"
+        "out_vals     : c x word_bits/8 bytes (word-sized LE)")
+    fs = findings_of(_drift_project(tmp_path, doc), ["format-schema-drift"])
+    assert len(fs) == 1
+    assert "diverges from format_doc.serialize_page" in fs[0].message
+
+
+def test_schema_drift_fires_on_table_field_mismatch(tmp_path):
+    doc = _DRIFT_DOC.replace("| `profile` | scalar | int32 | profile id |\n", "")
+    fs = findings_of(_drift_project(tmp_path, doc), ["format-schema-drift"])
+    assert len(fs) == 1
+    assert "missing from the table: ['profile']" in fs[0].message
+
+
+def test_schema_drift_silent_without_contract_files():
+    # fixture projects without format_doc.py carry no format contract
+    fs = checks_of({"src/a.py": "x = 1\n"}, "format-schema-drift")
+    assert fs == []
+
+
+# --------------------------------------------------------------------------
+# false-positive corpus: real idioms every checker must stay silent on
+# --------------------------------------------------------------------------
+
+_FP_CORPUS = {"src/repro/serving/corpus.py": """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+
+    @functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("scale",))
+    def step(state, x, scale: int = 1):
+        return state + x * scale
+
+    def pod_step(mesh, specs, state, xs):
+        # donated-then-rebound through a shard_map wrapper
+        fn = shard_map(step, mesh=mesh, in_specs=specs, out_specs=specs)
+        state = fn(state, xs)
+        return state
+
+    def scan_loop(state, xs):
+        # fori_loop carries thread the buffer functionally
+        def body(i, carry):
+            acc, buf = carry
+            buf = jax.lax.dynamic_update_slice(buf, xs[i][None], (i, 0))
+            return acc + buf.sum(), buf
+        acc, buf = jax.lax.fori_loop(0, xs.shape[0], body, (0.0, state))
+        return acc, buf
+
+    def chain(state, updates):
+        # dynamic_update_slice chains rebind at every step
+        for i, u in enumerate(updates):
+            state = jax.lax.dynamic_update_slice(state, u, (i, 0))
+        return state
+
+    def rebound(state, x):
+        state = step(state, x)
+        out = state * 2
+        state = step(state, out)
+        return jnp.sum(state)
+    """}
+
+
+def test_false_positive_corpus_is_clean():
+    report = run_analysis(make_project(_FP_CORPUS))
+    assert report.ok and report.new == [], "\n" + report.render_text()
+
+
+
 
 _FIRING_SRC = {"src/a.py": """
     import numpy as np
@@ -421,6 +862,60 @@ def test_baseline_stale_only_counts_checks_that_ran():
     bl = Baseline([BaselineEntry("backend-parity", "p.py", "def f(", "j")])
     report = run_analysis(project, checks=fast_checks(), baseline=bl)
     assert report.ok and report.stale == []
+
+
+_DUP_LINES = {"src/a.py": """
+    import numpy as np
+
+    def f():
+        x = np.random.rand(3)
+        return x
+
+    def g():
+        x = np.random.rand(3)
+        return x
+"""}
+
+
+def test_duplicate_anchor_lines_get_occurrence_indices():
+    # two findings share (check, path, stripped line); the engine numbers
+    # them in line order so baseline entries address exactly one each
+    report = run_analysis(make_project(_DUP_LINES),
+                          checks=[get_check("unseeded-random")])
+    assert [f.occurrence for f in report.new] == [0, 1]
+    assert report.new[0].line < report.new[1].line
+    assert report.new[0].anchor == report.new[1].anchor
+
+
+def test_baseline_occurrence_suppresses_exactly_one_copy():
+    project = make_project(_DUP_LINES)
+    anchor = "x = np.random.rand(3)"
+    bl = Baseline([BaselineEntry("unseeded-random", "src/a.py", anchor, "j",
+                                 occurrence=0)])
+    report = run_analysis(project, checks=[get_check("unseeded-random")],
+                          baseline=bl)
+    assert len(report.suppressed) == 1 and len(report.new) == 1
+    assert report.new[0].occurrence == 1   # only the first copy is baselined
+    bl2 = Baseline(bl.entries + [BaselineEntry(
+        "unseeded-random", "src/a.py", anchor, "j2", occurrence=1)])
+    report = run_analysis(project, checks=[get_check("unseeded-random")],
+                          baseline=bl2)
+    assert report.ok and len(report.suppressed) == 2 and report.stale == []
+
+
+def test_baseline_occurrence_roundtrip_and_validation(tmp_path):
+    bl = Baseline([BaselineEntry("c", "p.py", "x = 1", "because", occurrence=2)])
+    bl.dump(tmp_path / "b.json")
+    assert Baseline.load(tmp_path / "b.json").entries == bl.entries
+    # omitting the key defaults to occurrence 0 (pre-index baselines load)
+    (tmp_path / "b.json").write_text(json.dumps({"entries": [
+        {"check": "c", "path": "p", "anchor": "a", "justification": "j"}]}))
+    assert Baseline.load(tmp_path / "b.json").entries[0].occurrence == 0
+    (tmp_path / "b.json").write_text(json.dumps({"entries": [
+        {"check": "c", "path": "p", "anchor": "a", "justification": "j",
+         "occurrence": -1}]}))
+    with pytest.raises(BaselineError, match="occurrence"):
+        Baseline.load(tmp_path / "b.json")
 
 
 def test_baseline_load_rejects_empty_justification(tmp_path):
@@ -518,10 +1013,22 @@ def test_cli_list_checks(capsys):
         assert c.id in out
 
 
+def test_cli_vmem_report_writes_json(tmp_path):
+    _write_tree(tmp_path, {"src/a.py": "x = 1\n"})
+    out = tmp_path / "vmem.json"
+    rc = cli_main(["src", "--root", str(tmp_path), "--vmem-report", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert set(payload) == {"available", "kernels"}
+    if payload["available"]:
+        assert payload["kernels"] == []        # fixture tree has no kernels
+
+
 def test_fast_subset_is_file_scoped():
     fast = fast_checks()
     assert fast and all(c.scope == "file" for c in fast)
-    assert {c.id for c in all_checks()} - {c.id for c in fast} == {"backend-parity"}
+    assert {c.id for c in all_checks()} - {c.id for c in fast} == {
+        "backend-parity", "vmem-over-budget", "format-schema-drift"}
 
 
 # --------------------------------------------------------------------------

@@ -20,6 +20,13 @@ Alongside the property: memory-pressure admission edge cases (oversize
 prompts rejected loudly at submit, never queued forever), eviction-victim
 selection (mid-prefill sequences are never parked), and byte-accounting
 conservation (``resident_bytes`` drains back to zero).
+
+Byte accounting is token-level: each request reserves the compressed KV
+bytes of its *own* final context (``prompt + max_new``, clipped to the
+cache ceiling), not the static worst-case ``max_len`` slot — tested both
+against the real page-granular spec (short requests admitted concurrently
+where slot accounting serialized them) and against a token-linear spec
+double that makes the reservation arithmetic exact.
 """
 import dataclasses
 import functools
@@ -82,7 +89,7 @@ def _run_schedule(seed: int) -> Scheduler:
     """One randomized admit/tick/park program, then drain; every finished
     request must be token-identical to its solo run."""
     rng = np.random.default_rng(seed)
-    sched, budget_seqs = _mk_sched(rng)
+    sched, _ = _mk_sched(rng)
     n_req = int(rng.integers(2, 6))
     pending = [(int(rng.integers(0, len(_PROMPTS))),
                 _MAX_NEW[int(rng.integers(0, len(_MAX_NEW)))],
@@ -116,7 +123,10 @@ def _run_schedule(seed: int) -> Scheduler:
     assert sched.counters["finished"] == len(submitted)
     assert sched.counters["tokens"] == sum(len(r.out) for _, _, r in submitted)
     assert sched.counters["peak_resident_bytes"] <= sched.byte_budget
-    assert sched.counters["peak_resident"] <= budget_seqs
+    # token-level accounting admits by reservation, not by worst-case slot
+    # count, so the resident ceiling is the engine's slots plus whatever
+    # the byte budget allows — never more than the slots themselves
+    assert sched.counters["peak_resident"] <= len(sched.engine.slot_req)
     return sched
 
 
@@ -179,15 +189,88 @@ def test_byte_accounting_returns_to_baseline_after_drain():
     sched, _ = _mk_sched(rng, slots=3, budget_seqs=1)  # 3 slots, budget for 1
     reqs = [(i % 3, sched.submit(_PROMPTS[i % 3], max_new=3))
             for i in range(3)]
+    # one worst-case slot of budget holds exactly one token-level
+    # reservation on this model (2 * reserve > budget), so admissions are
+    # still serialized — but the peak accounts the reservation, not the
+    # static slot cost
+    reserve = sched.reserve_bytes(reqs[0][1])
+    assert reserve < sched.bytes_per_seq <= 2 * reserve
     done = sched.run()
     assert len(done) == 3 and sched.resident_bytes == 0
     assert sched.counters["peak_resident"] == 1        # budget, not slots
-    assert sched.counters["peak_resident_bytes"] == sched.bytes_per_seq
+    assert sched.counters["peak_resident_bytes"] == reserve
     for pi, r in reqs:
         assert tuple(r.out) == _solo(pi, 3)
     # admissions were serialized by the budget: queue latency is monotone
     waits = sorted(r.admit_tick - r.submit_tick for _, r in reqs)
     assert waits[0] == 0 and waits[-1] > 0
+
+
+def test_short_sequences_do_not_prepay_for_max_len():
+    """Token-level accounting headline: three short requests fit a budget
+    sized for two worst-case slots, because each reserves only its own
+    final context — static per-slot accounting would have serialized the
+    third behind a finished first."""
+    rng = np.random.default_rng(0)
+    sched, _ = _mk_sched(rng, slots=3, budget_seqs=2)
+    reqs = [sched.submit(_PROMPTS[i], max_new=3) for i in range(3)]
+    total = sum(sched.reserve_bytes(r) for r in reqs)
+    assert total <= sched.byte_budget < 3 * sched.bytes_per_seq
+    sched.step()
+    assert [r.state for r in reqs] == [RequestState.DECODING] * 3
+    sched.run()
+    assert sched.counters["peak_resident"] == 3        # > budget_seqs == 2
+    assert sched.counters["peak_resident_bytes"] == total <= sched.byte_budget
+    for i, r in enumerate(reqs):
+        assert tuple(r.out) == _solo(i, 3)
+
+
+class _LinearSpec:
+    """Token-linear KV-spec double: 8 compressed / 32 raw bytes per token
+    per layer, no page rounding — makes the reservation arithmetic exact."""
+
+    def __init__(self, max_len: int):
+        self.max_len = max_len
+
+    def compressed_bytes(self, batch: int) -> int:
+        return batch * self.max_len * 8
+
+    def compressed_bytes_upto(self, batch: int, n: int) -> int:
+        return batch * n * 8
+
+    def raw_bytes(self, batch: int) -> int:
+        return batch * self.max_len * 32
+
+    def raw_bytes_upto(self, batch: int, n: int) -> int:
+        return batch * n * 32
+
+
+@functools.lru_cache(maxsize=1)
+def _prop_engine():
+    _, model, params = _setup()
+    return Engine(model, params, batch_slots=2, max_len=MAX_LEN)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=1, max_value=MAX_LEN),
+       st.integers(min_value=1, max_value=2 * MAX_LEN))
+def test_reservation_tracks_final_context_not_max_len(p, m):
+    """Property: the reservation is exactly the request's own final
+    context (clipped to the cache ceiling), strictly below the static
+    ``max_len`` slot whenever the request cannot reach ``max_len``."""
+    eng = _prop_engine()
+    sched = Scheduler(eng, byte_budget=1 << 30, kv_spec=_LinearSpec(MAX_LEN))
+    req = sched.submit(np.zeros(p, np.int32), max_new=m)
+    ctx = min(MAX_LEN, p + m)
+    expected = sched.n_kv_layers * 8 * ctx
+    assert sched.reserve_bytes(req) == expected
+    assert expected <= sched.bytes_per_seq == sched.n_kv_layers * 8 * MAX_LEN
+    if p + m < MAX_LEN:
+        assert sched.reserve_bytes(req) < sched.bytes_per_seq
+    raw = Scheduler(eng, byte_budget=1 << 30, kv_spec=_LinearSpec(MAX_LEN),
+                    accounting="raw")
+    assert raw.reserve_bytes(raw.submit(np.zeros(p, np.int32), max_new=m)) \
+        == sched.n_kv_layers * 32 * ctx
 
 
 def test_priority_evicts_and_resumes_bit_identical():
